@@ -1,0 +1,72 @@
+"""BabelStream (paper Fig. 10): memory-bandwidth microbenchmark.
+
+The paper runs BabelStream across nine programming models on GH200 and
+reports fractions of peak HBM bandwidth.  This harness runs the Pallas
+kernels (interpret mode on CPU — wall-clock is NOT the metric off-TPU) and
+reports the roofline-derived figures: bytes moved per kernel and, on TPU,
+achieved GB/s vs the 819 GB/s v5e peak.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (
+    stream_add,
+    stream_bytes,
+    stream_copy,
+    stream_dot,
+    stream_mul,
+    stream_triad,
+)
+from repro.launch.hlo_analysis import HBM_BW
+
+N = 2**20  # elements (scaled for CPU interpret mode; 2**27 on real TPU)
+
+
+def run(n: int = N, dtype=jnp.float32, iters: int = 3) -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (n,), dtype)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,), dtype)
+    c = jax.random.normal(jax.random.fold_in(key, 2), (n,), dtype)
+    item = jnp.dtype(dtype).itemsize
+    kernels = {
+        "copy": lambda: stream_copy(a),
+        "mul": lambda: stream_mul(c),
+        "add": lambda: stream_add(a, b),
+        "triad": lambda: stream_triad(b, c),
+        "dot": lambda: stream_dot(a, b),
+    }
+    rows = []
+    on_tpu = jax.default_backend() == "tpu"
+    for name, fn in kernels.items():
+        fn()  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / iters
+        nbytes = stream_bytes(name, n, item)
+        rows.append(
+            {
+                "name": f"babelstream_{name}",
+                "us_per_call": dt * 1e6,
+                "bytes": nbytes,
+                "modeled_tpu_us": nbytes / HBM_BW * 1e6,  # at 819 GB/s
+                "achieved_gbps": nbytes / dt / 1e9 if on_tpu else None,
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        derived = f"modeled_v5e_us={r['modeled_tpu_us']:.1f}"
+        print(f"{r['name']},{r['us_per_call']:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""MLPerf BERT-Large training (paper Fig. 8).
+
+The paper reports single-node MLPerf BERT-Large time-to-train.  This harness
+trains the bert-large config (reduced on CPU) and derives the full-config
+per-step roofline time from the jaxpr cost model — the number a v5e pod is
+expected to hit, reported next to measured CPU step time for the reduced run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ParallelConfig, RunConfig, TrainConfig
+from repro.config.model import reduce_for_smoke
+from repro.configs import get_config
+from repro.data import make_batch_fn
+from repro.launch.hlo_analysis import PEAK_FLOPS
+from repro.launch.jaxpr_cost import estimate_cost
+from repro.train.step import abstract_train_state, init_train_state, make_train_step
+from repro.launch.specs import train_input_specs
+from repro.config import ShapeConfig
+
+
+def run(steps: int = 8) -> list[dict]:
+    # measured: reduced config on CPU
+    cfg = reduce_for_smoke(get_config("bert-large"))
+    run_cfg = RunConfig(arch="bert-large", train=TrainConfig(global_batch=8, seq_len=128))
+    state = init_train_state(cfg, run_cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, run_cfg))
+    batch_fn = make_batch_fn(cfg, global_batch=8, seq_len=128)
+    state, m = step(state, batch_fn(0))  # compile
+    t0 = time.perf_counter()
+    losses = []
+    for s in range(1, steps + 1):
+        state, m = step(state, batch_fn(s))
+        losses.append(float(m["loss"]))
+    dt = (time.perf_counter() - t0) / steps
+
+    # derived: full BERT-Large per-step time at MLPerf batch (448 seqs x 512)
+    full = get_config("bert-large").replace(max_position=512)
+    full_run = RunConfig(arch="bert-large", train=TrainConfig(global_batch=448, seq_len=512))
+    astate = abstract_train_state(full, full_run)
+    fstep = make_train_step(full, full_run)
+    batch = train_input_specs(full, ShapeConfig("mlperf", 512, 448, "train"))
+    est = estimate_cost(fstep, astate, batch)
+    v5e_step_s = est["flops"] / PEAK_FLOPS  # single chip, compute roofline
+    return [
+        {
+            "name": "mlperf_bert_reduced_cpu",
+            "us_per_call": dt * 1e6,
+            "derived": f"loss {losses[0]:.3f}->{losses[-1]:.3f}",
+        },
+        {
+            "name": "mlperf_bert_full_roofline",
+            "us_per_call": v5e_step_s * 1e6,
+            "derived": f"global_flops={est['flops']:.3g} per-step @1 v5e chip",
+        },
+    ]
+
+
+def main() -> None:
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

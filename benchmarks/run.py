@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper figure, CSV output.
+
+    Fig. 8  -> mlperf_train     (BERT-Large training)
+    Fig. 9  -> llm_inference    (llama.cpp-style decode throughput)
+    Fig. 10 -> babelstream      (memory bandwidth, Pallas kernels)
+    Fig. 11 -> cloverleaf       (stencil weak scaling, shard_map halos)
+
+Each prints ``name,us_per_call,derived`` rows.  On this CPU image the
+wall-clock columns are CPU-measured (reduced configs / interpret mode); the
+``derived`` columns carry the v5e-modeled numbers used in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import babelstream, cloverleaf, llm_inference, mlperf_train
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (mlperf_train, llm_inference, babelstream, cloverleaf):
+        try:
+            for r in mod.run():
+                derived = r.get("derived") or f"modeled_v5e_us={r.get('modeled_tpu_us', r.get('modeled_v5e_us', 0)):.1f}"
+                print(f"{r['name']},{r['us_per_call']:.1f},{derived}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Facility simulation: phase-2-scale scheduling, failures, sustainability.
+
+    PYTHONPATH=src python examples/cluster_sim.py
+
+Simulates a week of the 1,320-node phase-2 system under a realistic mixed
+workload (the paper's four QoS classes), with random node failures at a
+50k-hour node MTBF, calendar reservations, and DCIM energy accounting.
+No model math runs — this exercises the platform layer at full scale.
+"""
+
+import random
+
+from repro.core import (
+    CHIPS_PER_NODE,
+    Cluster,
+    EnergyLedger,
+    Job,
+    JobState,
+    PHASE2,
+    QoS,
+    Reservation,
+    Scheduler,
+    mw_check,
+)
+
+
+def main() -> None:
+    rng = random.Random(0)
+    cluster = Cluster(PHASE2)  # 1,320 nodes / 5,280 chips
+    sched = Scheduler(cluster)
+    ledger = EnergyLedger()
+
+    # workload: 2 frontier training runs, a stream of fine-tunes/experiments,
+    # a standing inference fleet, one calendar reservation
+    sched.submit(Job("frontier-a", "lab-a", QoS.TRAINING, chips=2048, duration=72 * 3600, checkpoint_interval=1800))
+    sched.submit(Job("frontier-b", "lab-b", QoS.TRAINING, chips=1024, duration=48 * 3600, checkpoint_interval=1800))
+    sched.submit(Job("serve-fleet", "platform", QoS.INFERENCE, chips=512, duration=7 * 24 * 3600))
+    sched.reserve(Reservation("ai-safety-eval", "aisi", chips=1024, start=24 * 3600, end=36 * 3600))
+
+    horizon = 7 * 24 * 3600
+    tick = 600.0  # 10-minute scheduler ticks
+    t = 0.0
+    failures = 0
+    next_exp = 0
+    while t < horizon:
+        t += tick
+        # random small jobs arriving (experimentation / fine-tuning)
+        if rng.random() < 0.3:
+            qos = rng.choice([QoS.EXPERIMENTATION, QoS.FINE_TUNING])
+            chips = rng.choice([4, 8, 32, 128])
+            sched.submit(Job(f"small-{next_exp}", "users", qos, chips=chips, duration=rng.uniform(600, 7200)))
+            next_exp += 1
+        # node failures: 50k-hour MTBF x 1,320 nodes ~ one failure / 38 h
+        p_fail = tick / (50_000 * 3600) * len(cluster.nodes)
+        if rng.random() < p_fail:
+            victim = rng.choice(list(cluster.nodes))
+            cluster.fail_node(victim)
+            failures += 1
+        # repairs: 4-hour turnaround
+        for n in cluster.nodes.values():
+            if n.state.value == "failed" and rng.random() < tick / (4 * 3600):
+                cluster.repair_node(n.node_id, t)
+        sched.tick(t)
+        for job in sched.running.values():
+            ledger.record(job.job_id, chips=len(job.nodes) * CHIPS_PER_NODE, seconds=tick, utilization=0.55)
+
+    done = [j for j in sched.done.values() if j.state == JobState.COMPLETED]
+    print(f"week simulated: {len(done)} jobs completed, {failures} node failures")
+    print(f"final utilization: {sched.utilization():.1%}")
+    restarted = [j for j in list(sched.done.values()) + list(sched.running.values()) if j.restarts]
+    print(f"jobs that survived failures via flex-restart: {[j.job_id for j in restarted]}")
+    rep = ledger.report()
+    print(f"energy: {rep['facility_kwh']:,.0f} kWh facility (PUE {rep['effective_pue']}), "
+          f"scope2 {rep['scope2_kgco2']:,.0f} kgCO2")
+    print(f"peak facility power at full load: {mw_check(PHASE2.total_chips):.2f} MW (envelope: 5 MW)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: build a model, train a few steps, decode a few tokens.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch olmo-1b]
+
+Uses the reduced config of any assigned architecture so it runs on a laptop
+CPU in under a minute.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RunConfig, TrainConfig
+from repro.config.model import reduce_for_smoke
+from repro.configs import ASSIGNED, get_config
+from repro.data import make_batch_fn
+from repro.models import init_params
+from repro.serving import InferenceEngine
+from repro.train.step import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ASSIGNED + ["bert-large"])
+    ap.add_argument("--steps", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    print(f"arch={cfg.name} family={cfg.family} reduced params={cfg.param_count()/1e6:.2f}M")
+
+    run = RunConfig(arch=args.arch, train=TrainConfig(global_batch=8, seq_len=64))
+    state = init_train_state(cfg, run, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, run))
+    batch_fn = make_batch_fn(cfg, global_batch=8, seq_len=64)
+
+    for s in range(args.steps):
+        state, metrics = step(state, batch_fn(s))
+        print(f"step {s:3d}  loss {float(metrics['loss']):.4f}  lr {float(metrics['lr']):.2e}")
+
+    if not cfg.is_encoder_only:
+        eng = InferenceEngine(cfg, state.params, max_batch=2, max_seq=128)
+        req = eng.submit([1, 2, 3, 4], max_new_tokens=8)
+        eng.run_until_drained()
+        print(f"generated: {req.generated}")
+
+
+if __name__ == "__main__":
+    main()

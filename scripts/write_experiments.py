@@ -1,0 +1,247 @@
+"""Render EXPERIMENTS.md from the dry-run JSONs + the §Perf iteration log."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.hlo_analysis import PEAK_FLOPS
+from repro.launch.roofline import cell_rows, load, markdown_table, pick_hillclimb
+
+ROOT = Path(__file__).resolve().parents[1]
+
+PERF_LOG = """\
+## §Perf — hypothesis → change → measure → validate
+
+All numbers are the three roofline terms **per train/serve step** on the
+single-pod 16×16 mesh (256 chips), from the final compiled artifacts.
+Methodology: enumerate candidates, napkin-math the expected delta, implement
+the biggest predicted win, re-lower, re-analyse, record confirmed/refuted.
+
+### Memory-fitting iterations (pre-baseline engineering, all cells)
+
+| # | hypothesis | change | before → after | verdict |
+|---|---|---|---|---|
+| M1 | inner scans (SSD chunks / q-chunks / WKV chunks / MoE groups) save every per-iteration intermediate for backward | `jax.checkpoint` on all inner-scan bodies | hymba train 22.2→4.7 GB temp/chip; vlm 42→33 GB | **confirmed** (−79% on hymba) |
+| M2 | fp32 vocab tables are materialized unsharded around gather/logits | vocab→model sharding, embed dim of tables unsharded (`embed_v`) | vlm 4.2 GB ×4 copies eliminated | **confirmed** |
+| M3 | logits inherit seq-sharding from the residual stream → XLA all-gathers the vocab table | explicit vocab-sharded constraint in `lm_logits` | mistral peak 17.9→11.3 GB; qwen 32.8→25.6 GB | **confirmed** |
+| M4 | whole-tree bf16 pre-cast hoists an unsharded bf16 weight tree | per-use layer-slice casts (cast activations, not weights) | llama-90b ~33 GB of hoisted tree removed (combined with M2/M3) | **confirmed** |
+| M5 | fp32 Adam chains on stacked 100B+ tensors dominate temps → scan the update per layer | `optimizer_layer_scan` | arctic 39.9→**57.2** GB (scan ys double-buffer the whole stacked tree on XLA:CPU) | **REFUTED** (feature kept, off by default) |
+| M6 | fp32 microbatch accumulator + Adam temps shrink with bf16 moments | bf16 optimizer states + mb=8 for ≥90B archs | qwen 25.6→21.5 GB; vlm 26.6 GB | **confirmed** |
+
+### Cell 1 — qwen3-moe-235b-a22b × train_4k (most representative: frontier MoE training)
+
+Baseline (paper-faithful FSDP+TP+SP, GShard dispatch): compute 7.33 s,
+memory 16.73 s, **collective 143.32 s** (dominant).
+
+| # | hypothesis | change | collective term | verdict |
+|---|---|---|---|---|
+| 1.1 | seq-sharded K/V vs head-sharded scores forces "involuntary full rematerialization" reshards in every layer loop (XLA SPMD warning) | replicate K/V heads in attention internals (Megatron GQA duplication) | 143.3 → **109.4 s** | **confirmed** (−24%) |
+| 1.2 | expert weights over the data axes (stationary experts, all-to-all tokens) beat FSDP-gathered experts | `expert→(data,)` param rule | 109.4 → **208.8 s** | **REFUTED**: dense GShard dispatch reduces a dense (E,C,D) tensor over data |
+| 1.3 | shard expert hidden dim over data instead | `expert_mlp→(data,)` in train | 109.4 → **223.0 s** | **REFUTED** for train (accepted for decode, see cell 3) |
+| 1.4 | fewer MoE group-scan iterations → fewer repeated gathers | group_size 2048→8192 / 16384 | 109.4 → 183.1 / 220.2 s | **REFUTED**: capacity C ∝ group ⇒ dispatch one-hot cost grows quadratically |
+| 1.5 | saving dot outputs avoids re-gathering activations in backward | remat "dots" | 109.4 → **82.4 s** but peak 21→**204.5 GB** | **REFUTED on memory** ("dots_no_batch": 99.7 s @ 34 GB, < 10%, also rejected) |
+
+Accepted: 1.1. Final: compute 7.33 s / memory 16.73 s / collective 109.4 s.
+Residual analysis: the remaining term is Megatron-SP activation
+all-gather/reduce-scatter + TP psums per layer, inflated ~2× by the CPU
+backend upcasting bf16 dots to f32 before partitioning (verified: all dots
+are bf16 at the jaxpr level) — TPU-modeled ≈ 55 s, further overlappable with
+per-layer compute. Roofline fraction 1.9% → **2.5%** (6·N_active·D reference).
+
+### Cell 2 — arctic-480b × decode_32k (worst roofline fraction)
+
+Baseline: compute 0.20 ms, memory 13.65 ms, **collective 186.58 ms** —
+*the serving step spent 93% of its time re-gathering FSDP weight shards*
+(diagnosed: 205 MB all-gather of wo per layer per step; 35 layers = 7.2 GB).
+
+| # | hypothesis | change | step bound | verdict |
+|---|---|---|---|---|
+| 2.1 | serving weights must be stationary: model-axis-only sharding removes per-step weight gathers; head_dim TP fallback (56 heads ∤ 16) keeps attention weights sharded; expert_mlp→data keeps the 937 GB expert bank fully sharded | decode runs: `fsdp=False` + `head_dim→model` + `expert_mlp→(data,)` | 186.6 → **13.65 ms** (now memory-bound) | **confirmed** (13.7× step time) |
+
+Final: compute 0.20 / memory 13.65 / **collective 2.94 ms** — decode is now
+HBM-bound on KV-cache + weight reads, the correct regime. Next lever,
+implemented as the opt-in serving feature `repro.serving.kvquant` (KIVI-style
+int8 KV, per-(token,head) scales): 1.9× KV-traffic reduction with attention
+output within bf16-level error (tests/test_kvquant.py).
+
+### Cell 3 — rwkv6-7b × decode_32k (most collective-bound)
+
+Baseline: compute 0.04 ms, memory 0.10 ms, **collective 36.01 ms** —
+per-layer TP all-reduces plus FSDP weight gathers on the D×D time-mix stack.
+
+| # | hypothesis | change | collective term | verdict |
+|---|---|---|---|---|
+| 3.1 | same stationary-weights change as 2.1 (rwkv weights column-sharded on heads_x_dim; WKV per-head local; one psum per mix) | decode `fsdp=False` | 36.0 → **0.85 ms** | **confirmed** (42×) |
+
+Final: compute 0.04 / memory 0.10 / collective 0.85 ms. The residual 0.85 ms
+is 2 small psums per layer ((B,1,D) activations) — the canonical TP decode
+cost; batching more requests amortizes it (the serving engine's job).
+
+### Cross-cutting accepted changes (visible across the whole table)
+
+* replicate-KV (1.1): mistral-nemo train collective 84.6 → 17.8 s (4.7×).
+* stationary serving weights (2.1/3.1): every decode cell dropped 5–60×.
+
+### Scoring note
+
+`roofline frac` = (MODEL_FLOPS / chips / 197 TF) / max(term) — the fraction
+of the modeled step spent doing irreducible model math. Training cells land
+at 2.5–21%, bounded by SP/TP collectives (CPU-doubled) and remat recompute;
+decode cells are intrinsically ≪1% on this metric because decode is
+bandwidth-bound — for them the memory term vs. step bound is the score.
+"""
+
+
+def main() -> None:
+    single = load("single")
+    multi = load("multi")
+    rows_s = cell_rows(single)
+    rows_m = cell_rows(multi)
+    ok_s = [r for r in rows_s if r.get("status") == "ok"]
+    ok_m = [r for r in rows_m if r.get("status") == "ok"]
+    skips = [r for r in rows_s if r.get("status", "").startswith("skip")]
+
+    # fits summary
+    fits = sum(1 for r in ok_s if r["fits"])
+    over = [(r["arch"], r["shape"], r["peak_gb"]) for r in ok_s if not r["fits"]]
+
+    # baseline vs optimized comparison for the three cells
+    base = load("single") if not (ROOT / "benchmarks/results/baseline_single.json").exists() else json.loads(
+        (ROOT / "benchmarks/results/baseline_single.json").read_text()
+    )
+
+    def cmp_cell(key):
+        b = base.get(key, {})
+        o = single.get(key, {})
+        if "roofline" not in b or "roofline" not in o:
+            return None
+        return (
+            key,
+            max(b["roofline"].values()) * 1e3,
+            max(o["roofline"].values()) * 1e3,
+        )
+
+    cmps = [cmp_cell(k) for k in (
+        "qwen3-moe-235b-a22b|train_4k", "arctic-480b|decode_32k", "rwkv6-7b|decode_32k"
+    )]
+
+    doc = []
+    doc.append("""# EXPERIMENTS
+
+All artifacts are reproducible on this CPU-only image:
+
+```bash
+PYTHONPATH=src python -m repro.launch.dryrun --mesh both --arch all   # §Dry-run
+PYTHONPATH=src python -m repro.launch.roofline --mesh single --pick   # §Roofline
+PYTHONPATH=src python -m benchmarks.run                               # §Paper-figures
+PYTHONPATH=src pytest tests/                                          # §Fault-tolerance et al.
+```
+
+Hardware constants (assignment): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI; meshes 16×16 (single pod, 256 chips) and 2×16×16 (512).
+
+## §Dry-run
+
+Every runnable (arch × shape) cell lowers **and compiles** the real
+`train_step` / `prefill` / `decode_step` with full-size ShapeDtypeStruct
+inputs and the production sharding trees on forced host devices — both
+meshes, zero errors:
+""")
+    doc.append(f"* single pod (16×16): **{len(ok_s)} cells compiled**, {len(skips)} documented skips\n")
+    doc.append(f"* multi pod (2×16×16): **{len(ok_m)} cells compiled**, {len(skips)} documented skips\n")
+    doc.append("""
+Documented skips (assignment rules, DESIGN.md §Arch-applicability):
+`long_500k` for the eight pure full-attention archs (no sub-quadratic
+mechanism); `decode_32k`+`long_500k` for hubert-xlarge (encoder-only).
+40 cells = 31 compiled + 9 principled skips.
+
+Accounting notes (verified empirically, see tests/test_cost_models.py):
+* XLA's `cost_analysis()` counts a `while` body ONCE — per-cell FLOPs/bytes
+  therefore come from the jaxpr cost model (scan bodies × trip counts,
+  remat recompute included); raw XLA numbers are stored as lower bounds.
+* Collective bytes are parsed from the SPMD-partitioned HLO with the
+  computation call graph, multiplying collectives inside while bodies by
+  parsed trip counts.
+* `memory_analysis()` is per-device. XLA:CPU double-buffers donated buffers
+  through `while` loops and upcasts bf16 dots to f32 before partitioning —
+  both inflate temp/collective numbers vs. a real TPU lowering (≤2×).
+""")
+    doc.append(f"\nPer-chip fit vs the 16 GB v5e HBM budget: **{fits}/{len(ok_s)}** cells fit on the single pod.\n")
+    if over:
+        doc.append("Over-budget cells (all fit the 512-chip multi-pod mesh or carry a documented lever):\n")
+        for a, s_, gb in over:
+            doc.append(f"* {a} × {s_}: {gb:.1f} GB/chip\n")
+
+    doc.append("\n## §Roofline — single-pod baseline table (all 40 assigned cells)\n\n")
+    doc.append(markdown_table(rows_s))
+    doc.append("""
+Columns: the assignment's three terms in ms/step; `6ND/HLO` = MODEL_FLOPS /
+jaxpr-counted FLOPs (remat/attention/dispatch overhead detector — rwkv6 ≈ 1.0
+means nearly all compiled compute is model math; qwen ≈ 0.38 exposes the
+GShard dispatch einsums + remat recompute); `roofline frac` = model-math time
+÷ dominant term (the §Perf score).
+
+Hillclimb cell selection (per assignment; computed on the BASELINE table --
+benchmarks/results/baseline_single.json -- the optimized table above
+already reflects the hillclimb):
+""")
+    sel = pick_hillclimb(cell_rows(base))
+    for why, r in sel.items():
+        doc.append(f"* **{why}**: {r['arch']} × {r['shape']} (frac {r['roofline_frac']:.1%}, dominant {r['dominant']})\n")
+
+    doc.append("\n### Multi-pod (2×16×16) highlights\n\n")
+    doc.append("| arch | shape | compute ms | memory ms | coll. ms | dominant | peak GB/chip |\n|---|---|---|---|---|---|---|\n")
+    for r in ok_m:
+        if r["shape"] == "train_4k":
+            doc.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+                f"| {r['collective_s']*1e3:.1f} | {r['dominant'].replace('_s','')} | {r['peak_gb']:.1f} |\n"
+            )
+    doc.append("""
+The pod axis adds cross-DCN gradient sync (modeled in
+`parallel/collectives.py`; `grad_compression="int8"` cuts its wire bytes 4×
+with error feedback — convergence property-tested in tests/test_optim_data.py).
+
+""")
+    doc.append(PERF_LOG)
+
+    if all(cmps):
+        doc.append("\n### Before/after (step bound = max roofline term, single pod)\n\n")
+        doc.append("| cell | baseline | optimized | speedup |\n|---|---|---|---|\n")
+        for key, b, o in cmps:
+            doc.append(f"| {key} | {b:.1f} ms | {o:.1f} ms | {b/o:.1f}× |\n")
+
+    doc.append("""
+## §Paper-figures (benchmarks/run.py)
+
+| paper figure | harness | headline result |
+|---|---|---|
+| Fig. 8 MLPerf BERT-Large | `benchmarks/mlperf_train.py` | reduced-config CPU training loss decreases; full-config compute roofline derived per chip |
+| Fig. 9 llama.cpp 70B | `benchmarks/llm_inference.py` | continuous-batching engine throughput (CPU) + mistral-nemo decode_32k pod roofline ≈ 2,300 tok/s/pod equivalent |
+| Fig. 10 BabelStream | `benchmarks/babelstream.py` | Pallas copy/mul/add/triad/dot validated vs oracles; modeled v5e times at 819 GB/s |
+| Fig. 11 CloverLeaf | `benchmarks/cloverleaf.py` | shard_map stencil with ppermute halos; halo/compute ratio ⇒ weak-scaling efficiency ≈ 0.999 |
+
+## §Fault-tolerance & platform (tests, all green)
+
+* **bit-exact flex-restart**: a node failure at step 7 of 12 rolls back to the
+  step-5 checkpoint and replays to a state identical to the failure-free run
+  (tests/test_fault_tolerance.py) — the paper's "guaranteed completion".
+* **QoS scheduler**: inference preempts flex-trained batch jobs, which requeue
+  and complete; calendar reservations auto-start/stop; property-tested
+  invariants: no double-booking, rollback ≤ one checkpoint interval.
+* **Tenancy/RBAC**: quota enforcement, node exclusivity, token expiry.
+* **Checkpoint tiers**: a 480 B-param (bf16 ×3) checkpoint writes in < 2 s at
+  the paper's 1,980 GB/s ClusterStor envelope; Young/Daly cadence for 1,320
+  nodes ⇒ ~38 h job MTBF, < 5% checkpoint overhead.
+* **Sustainability**: effective PUE 1.083 (< 1.1 paper target); phase-2 power
+  model ≈ 1.9 MW at full load (5 MW envelope); per-job kWh + scope-2 kgCO₂.
+""")
+
+    (ROOT / "EXPERIMENTS.md").write_text("".join(doc))
+    print("wrote EXPERIMENTS.md", len("".join(doc)), "chars")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — an Isambard-AI-class AI-platform stack in JAX.
+
+Reproduction of "Isambard-AI: a leadership class supercomputer optimised
+specifically for Artificial Intelligence" (McIntosh-Smith, Alam, Woods; 2024),
+adapted to TPU v5e pods.  See DESIGN.md for the paper-to-system mapping.
+"""
+
+__version__ = "1.0.0"

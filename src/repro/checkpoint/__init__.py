@@ -1,0 +1,21 @@
+from repro.checkpoint.manager import CheckpointManager, SaveRecord
+from repro.checkpoint.storage import QOS_TIER, TIERS, DataMover, StorageTier
+from repro.checkpoint.tensorstore_lite import (
+    available_steps,
+    checkpoint_bytes,
+    restore_pytree,
+    save_pytree,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "SaveRecord",
+    "QOS_TIER",
+    "TIERS",
+    "DataMover",
+    "StorageTier",
+    "available_steps",
+    "checkpoint_bytes",
+    "restore_pytree",
+    "save_pytree",
+]

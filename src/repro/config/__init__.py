@@ -1,0 +1,33 @@
+from repro.config.model import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    RWKVConfig,
+    VisionConfig,
+)
+from repro.config.run import (
+    MeshConfig,
+    ParallelConfig,
+    PrecisionConfig,
+    TrainConfig,
+    ServeConfig,
+    ShapeConfig,
+    RunConfig,
+    SHAPES,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "RWKVConfig",
+    "VisionConfig",
+    "MeshConfig",
+    "ParallelConfig",
+    "PrecisionConfig",
+    "TrainConfig",
+    "ServeConfig",
+    "ShapeConfig",
+    "RunConfig",
+    "SHAPES",
+]

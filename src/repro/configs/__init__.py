@@ -1,0 +1,58 @@
+"""Architecture registry: the 10 assigned archs + the paper's benchmark archs.
+
+Each ``<arch>.py`` transcribes the assignment table exactly; ``get_config``
+resolves the dashed arch id (``--arch rwkv6-7b``).
+"""
+
+from __future__ import annotations
+
+from repro.config import ModelConfig
+from repro.utils.registry import Registry
+
+ARCHS: Registry = Registry("architecture")
+
+
+def register(name: str):
+    def deco(fn):
+        ARCHS.register(name, fn)
+        return fn
+
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    return ARCHS.get(name)()
+
+
+def list_archs() -> list[str]:
+    return ARCHS.names()
+
+
+# import for registration side effects
+from repro.configs import (  # noqa: E402,F401
+    arctic_480b,
+    bert_large,
+    gemma_7b,
+    hubert_xlarge,
+    hymba_1_5b,
+    llama32_vision_90b,
+    mistral_nemo_12b,
+    olmo_1b,
+    qwen3_moe_235b,
+    rwkv6_7b,
+    stablelm_12b,
+)
+
+# The ten assigned architectures (dry-run set), in assignment order.
+ASSIGNED = [
+    "rwkv6-7b",
+    "olmo-1b",
+    "mistral-nemo-12b",
+    "stablelm-12b",
+    "gemma-7b",
+    "hubert-xlarge",
+    "arctic-480b",
+    "qwen3-moe-235b-a22b",
+    "hymba-1.5b",
+    "llama-3.2-vision-90b",
+]

@@ -1,0 +1,54 @@
+"""The paper's contribution: an AI-platform runtime for a leadership-class
+facility — QoS scheduling, tenancy, elasticity, fault tolerance, telemetry."""
+
+from repro.core.cluster import (
+    CHIPS_PER_NODE,
+    Cluster,
+    ClusterSpec,
+    Node,
+    NodeState,
+    DRYRUN_MULTI,
+    DRYRUN_SINGLE,
+    PHASE1,
+    PHASE2,
+)
+from repro.core.elastic import ElasticPlan, make_elastic_mesh, plan_resize, reshard_state, resize_batch
+from repro.core.fault import FaultTolerantRunner, RunReport
+from repro.core.federation import IAM, Identity, Role
+from repro.core.scheduler import Job, JobState, QoS, Reservation, Scheduler
+from repro.core.straggler import StragglerDetector
+from repro.core.telemetry import EnergyLedger, effective_pue, mw_check
+from repro.core.tenancy import Tenant, TenantManager
+
+__all__ = [
+    "CHIPS_PER_NODE",
+    "Cluster",
+    "ClusterSpec",
+    "Node",
+    "NodeState",
+    "DRYRUN_MULTI",
+    "DRYRUN_SINGLE",
+    "PHASE1",
+    "PHASE2",
+    "ElasticPlan",
+    "make_elastic_mesh",
+    "plan_resize",
+    "reshard_state",
+    "resize_batch",
+    "FaultTolerantRunner",
+    "RunReport",
+    "IAM",
+    "Identity",
+    "Role",
+    "Job",
+    "JobState",
+    "QoS",
+    "Reservation",
+    "Scheduler",
+    "StragglerDetector",
+    "EnergyLedger",
+    "effective_pue",
+    "mw_check",
+    "Tenant",
+    "TenantManager",
+]

@@ -1,0 +1,103 @@
+"""Elastic scaling: re-mesh + re-shard a live job when capacity changes.
+
+Paper §III.F lists elasticity as a first-class AI-platform requirement.  For
+a JAX SPMD job that means: pick a new (data, model) mesh for the surviving
+chip count, keep per-chip batch constant (global batch scales with capacity —
+the standard elastic-training contract), and ``jax.device_put`` every state
+leaf onto the new sharding.  Re-sharding moves only data (parameters are
+resharded, not re-initialized), so the loss trajectory continues within
+optimizer-batch tolerance — asserted in tests/test_elastic.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh
+
+from repro.config import MeshConfig, ParallelConfig
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    old_chips: int
+    new_chips: int
+    data: int  # new data-parallel degree
+    model: int  # new model-parallel degree
+    old_global_batch: int
+    new_global_batch: int
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.data, self.model)
+
+
+def plan_resize(
+    *,
+    old_chips: int,
+    new_chips: int,
+    model_parallel: int,
+    global_batch: int,
+    batch_divisor: int = 1,
+) -> ElasticPlan:
+    """Choose the largest usable mesh on the new capacity.
+
+    Keeps the model-parallel degree (sharding the model differently would
+    need a full re-layout); data-parallel shrinks to what fits; per-chip
+    batch stays constant so step time is unchanged and throughput scales
+    with capacity.
+    """
+    if new_chips < model_parallel:
+        raise ValueError(f"cannot fit model_parallel={model_parallel} on {new_chips} chips")
+    data = new_chips // model_parallel
+    # keep global batch divisible by the new data degree (and any divisor)
+    per_data = max(global_batch // max(old_chips // model_parallel, 1), 1)
+    new_batch = max(per_data * data, batch_divisor)
+    new_batch -= new_batch % max(batch_divisor, 1)
+    return ElasticPlan(
+        old_chips=old_chips,
+        new_chips=new_chips,
+        data=data,
+        model=model_parallel,
+        old_global_batch=global_batch,
+        new_global_batch=max(new_batch, batch_divisor),
+    )
+
+
+def make_elastic_mesh(plan: ElasticPlan, devices=None) -> Mesh:
+    import numpy as np
+
+    devices = devices if devices is not None else jax.devices()
+    need = plan.data * plan.model
+    if len(devices) < need:
+        # CPU test hosts have fewer devices: tile the plan onto what exists
+        # (sharding semantics preserved; physical placement degenerate)
+        need = len(devices)
+        data = max(need // plan.model, 1)
+        grid = np.array(devices[: data * min(plan.model, need)]).reshape(data, -1)
+        return Mesh(grid, ("data", "model"))
+    grid = np.array(devices[:need]).reshape(plan.data, plan.model)
+    return Mesh(grid, ("data", "model"))
+
+
+def reshard_state(state, new_shardings):
+    """Move every leaf onto its new sharding (data motion only)."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, new_shardings)
+
+
+def resize_batch(batch, plan: ElasticPlan):
+    """Shrink/grow the global batch to the plan (drop or repeat tail)."""
+
+    def fix(x):
+        b = x.shape[0]
+        if b == plan.new_global_batch:
+            return x
+        if b > plan.new_global_batch:
+            return x[: plan.new_global_batch]
+        reps = -(-plan.new_global_batch // b)
+        import jax.numpy as jnp
+
+        return jnp.concatenate([x] * reps, axis=0)[: plan.new_global_batch]
+
+    return jax.tree.map(fix, batch)

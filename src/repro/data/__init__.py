@@ -1,0 +1,5 @@
+from repro.data.synthetic import make_batch_fn, synthetic_batch
+from repro.data.loader import ShardedLoader
+from repro.data.packing import pack_sequences
+
+__all__ = ["make_batch_fn", "synthetic_batch", "ShardedLoader", "pack_sequences"]

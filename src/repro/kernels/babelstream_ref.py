@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the BabelStream kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def copy_ref(a):
+    return a
+
+
+def mul_ref(c, scalar: float = 0.4):
+    return scalar * c
+
+
+def add_ref(a, b):
+    return a + b
+
+
+def triad_ref(b, c, scalar: float = 0.4):
+    return b + scalar * c
+
+
+def dot_ref(a, b):
+    return jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32))

@@ -1,0 +1,26 @@
+"""Sequential pure-jnp oracle for the RWKV6 WKV recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """Sequential scan. r,k,v,logw: (BH, S, n); u: (BH, n) -> (BH, S, n)."""
+    BH, S, n = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))  # (BH, S, n) decay factors
+    uf = u.astype(jnp.float32)
+
+    def step(state, inputs):
+        rt, kt, vt, wt = inputs  # (BH, n) each
+        a = kt[:, :, None] * vt[:, None, :]  # (BH, n, n) outer product
+        out = jnp.einsum("bc,bcv->bv", rt, state + uf[:, :, None] * a)
+        new_state = wt[:, :, None] * state + a
+        return new_state, out
+
+    init = jnp.zeros((BH, n, n), jnp.float32)
+    xs = (rf.transpose(1, 0, 2), kf.transpose(1, 0, 2), vf.transpose(1, 0, 2), w.transpose(1, 0, 2))
+    _, outs = jax.lax.scan(step, init, xs)
+    return outs.transpose(1, 0, 2)  # (BH, S, n)

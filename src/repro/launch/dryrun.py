@@ -1,0 +1,350 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh) cell.
+
+For each runnable cell this lowers the real ``train_step`` / ``prefill`` /
+``decode_step`` with full-size ShapeDtypeStruct inputs and the production
+sharding trees, compiles it for 256 (single-pod 16x16) or 512 (multi-pod
+2x16x16) host devices, and records:
+
+* ``memory_analysis()``  — proves the per-device footprint,
+* ``cost_analysis()``    — per-device FLOPs / HBM bytes for §Roofline,
+* parsed collective operand/wire bytes from the partitioned HLO.
+
+Results are written incrementally to ``benchmarks/results/dryrun_<mesh>.json``
+so interrupted sweeps resume.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch all
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --arch rwkv6-7b --shape train_4k
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig, SHAPES
+from repro.configs import ASSIGNED, get_config
+from repro.launch.hlo_analysis import (
+    collective_stats,
+    dominant_term,
+    extract_cost,
+    memory_stats,
+    roofline_terms,
+)
+from repro.launch.jaxpr_cost import estimate_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    PREFILL_Q_CHUNK,
+    TRAIN_KNOBS,
+    CellKnobs,
+    cell_status,
+    decode_input_specs,
+    prefill_input_specs,
+    run_config_for,
+    train_input_specs,
+)
+from repro.models import abstract_cache, decode_step, prefill
+from repro.models.cache import raw_cache_axes
+from repro.parallel import make_rules
+from repro.train.step import abstract_train_state, make_train_step, state_shardings
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+# ---------------------------------------------------------------------------
+# per-kind lowering builders
+# ---------------------------------------------------------------------------
+
+
+def _batch_shardings(specs: dict, mesh, mesh_cfg: MeshConfig):
+    data = tuple(mesh_cfg.data_axes)
+
+    def one(s):
+        if s.shape and s.shape[0] % _size(mesh, data) == 0:
+            return NamedSharding(mesh, P(data, *([None] * (len(s.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, specs)
+
+
+def _size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def lower_train(arch, shape_name, mesh_cfg, mesh, knobs=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    knobs = knobs or TRAIN_KNOBS.get(arch, CellKnobs())
+    run = run_config_for(arch, shape, mesh_cfg, knobs)
+    rules = make_rules(mesh_cfg, run.parallel)
+    astate = abstract_train_state(cfg, run)
+    st_sh = state_shardings(cfg, run, rules, mesh, astate)
+    batch = train_input_specs(cfg, shape)
+    b_sh = _batch_shardings(batch, mesh, mesh_cfg)
+    step = make_train_step(
+        cfg, run, rules, mesh, q_chunk=knobs.q_chunk, param_shardings=st_sh.params
+    )
+    rep = NamedSharding(mesh, P())
+    metrics_sh = {"loss": rep, "aux_loss": rep, "lr": rep, "grad_norm": rep}
+    with mesh:
+        lowered = jax.jit(
+            step,
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, metrics_sh),
+            donate_argnums=(0,),
+        ).lower(astate, batch)
+    return lowered, cfg, run, step, (astate, batch)
+
+
+def lower_prefill(arch, shape_name, mesh_cfg, mesh, knobs=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    knobs = knobs or CellKnobs()
+    run = run_config_for(arch, shape, mesh_cfg, knobs)
+    rules = make_rules(mesh_cfg, run.parallel)
+    sh = rules.make_sharder(mesh)
+    from repro.models import abstract_params
+    from repro.train.step import DTYPES
+
+    params = abstract_params(cfg, DTYPES[run.precision.param_dtype])
+    p_sh = rules.param_shardings(cfg, mesh, params)
+    batch = prefill_input_specs(cfg, shape)
+    b_sh = _batch_shardings(batch, mesh, mesh_cfg)
+
+    if cfg.is_encoder_only:
+        # encoder "prefill" = batched forward inference (no cache exists)
+        from repro.models import forward
+
+        def fn(p, b):
+            return forward(cfg, p, b, sh=sh, q_chunk=PREFILL_Q_CHUNK)[0]
+
+        out_struct = jax.eval_shape(fn, params, batch)
+        out_sh = NamedSharding(
+            mesh, rules.spec_for(("batch", "seq", "vocab"), out_struct.shape, mesh, rules.act_rules())
+        )
+    else:
+
+        def fn(p, b):
+            return prefill(cfg, p, b, sh=sh, q_chunk=PREFILL_Q_CHUNK)
+
+        logits_struct, cache_struct = jax.eval_shape(fn, params, batch)
+        lg_sh = NamedSharding(
+            mesh, rules.spec_for(("batch", "vocab"), logits_struct.shape, mesh, rules.act_rules())
+        )
+        cache_sh = rules.tree_specs(raw_cache_axes(cfg), cache_struct, mesh, rules.cache_rules())
+        cache_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), cache_sh, is_leaf=lambda x: isinstance(x, P)
+        )
+        out_sh = (lg_sh, cache_sh)
+
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=out_sh).lower(params, batch)
+    return lowered, cfg, run, fn, (params, batch)
+
+
+def lower_decode(arch, shape_name, mesh_cfg, mesh, knobs=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    knobs = knobs or CellKnobs()
+    run = run_config_for(arch, shape, mesh_cfg, knobs)
+    rules = make_rules(mesh_cfg, run.parallel)
+    sh = rules.make_sharder(mesh)
+    from repro.models import abstract_params
+    from repro.train.step import DTYPES
+
+    dtype = DTYPES[run.precision.param_dtype]
+    params = abstract_params(cfg, dtype)
+    p_sh = rules.param_shardings(cfg, mesh, params)
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len, dtype)
+    c_sh = rules.cache_shardings(cfg, mesh, cache)
+    inp = decode_input_specs(cfg, shape)
+    i_sh = _batch_shardings(inp, mesh, mesh_cfg)
+
+    def fn(p, c, token, pos):
+        return decode_step(cfg, p, c, token, pos, sh=sh)
+
+    logits_struct, _ = jax.eval_shape(fn, params, cache, inp["token"], inp["pos"])
+    lg_sh = NamedSharding(
+        mesh, rules.spec_for(("batch", "vocab"), logits_struct.shape, mesh, rules.act_rules())
+    )
+    with mesh:
+        lowered = jax.jit(
+            fn,
+            in_shardings=(p_sh, c_sh, i_sh["token"], i_sh["pos"]),
+            out_shardings=(lg_sh, c_sh),
+            donate_argnums=(1,),
+        ).lower(params, cache, inp["token"], inp["pos"])
+    return lowered, cfg, run, fn, (params, cache, inp["token"], inp["pos"])
+
+
+LOWERERS = {"train": lower_train, "prefill": lower_prefill, "decode": lower_decode}
+
+
+# ---------------------------------------------------------------------------
+# model-FLOPs reference (6ND convention) for the useful-compute ratio
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_cfg: MeshConfig, mesh, knobs=None, verbose=True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    status = cell_status(cfg, shape_name)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if mesh_cfg.multi_pod else "single",
+        "n_devices": mesh_cfg.num_devices,
+        "status": status,
+    }
+    if status != "run":
+        return rec
+    kind = shape.kind
+    t0 = time.time()
+    lowered, cfg, run, cost_fn, cost_args = LOWERERS[kind](arch, shape_name, mesh_cfg, mesh, knobs)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    # global FLOPs / modeled HBM bytes from the jaxpr cost model (XLA's
+    # cost_analysis counts while bodies once — recorded as reference only)
+    est = estimate_cost(cost_fn, *cost_args)
+    n_dev = mesh_cfg.num_devices
+    flops = est["flops"] / n_dev
+    byts = est["hbm_bytes"] / n_dev
+    xla_flops, xla_bytes = extract_cost(compiled)
+    hlo = compiled.as_text()
+    colls = collective_stats(hlo)
+    mem = memory_stats(compiled)
+    # HLO is the SPMD-partitioned per-device module, so operand bytes are
+    # already per-device — matching the per-device flops/bytes convention.
+    terms = roofline_terms(flops, byts, colls.total_operand_bytes)
+    rec.update(
+        {
+            "per_device_flops": flops,
+            "per_device_hbm_bytes": byts,
+            "xla_body_flops": xla_flops,
+            "xla_body_bytes": xla_bytes,
+            "collectives": colls.as_dict(),
+            "memory": mem,
+            "roofline": terms,
+            "dominant": dominant_term(terms),
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "model_flops": model_flops(cfg, shape),
+            "useful_ratio": model_flops(cfg, shape) / max(flops * mesh_cfg.num_devices, 1.0),
+            "hlo_size": len(hlo),
+            "knobs": vars(knobs) if knobs and not isinstance(knobs, dict) else None,
+        }
+    )
+    if verbose:
+        print(f"  memory_analysis: {compiled.memory_analysis()}")
+        print(f"  jaxpr cost (global): flops={est['flops']:.4g} hbm_bytes={est['hbm_bytes']:.4g}")
+        ca = compiled.cost_analysis()
+        print(f"  cost_analysis (per-iter lower bound): flops={ca.get('flops'):.4g} bytes={ca.get('bytes accessed'):.4g}")
+        print(
+            f"  collectives: { {k: f'{v/1e6:.1f}MB' for k, v in colls.operand_bytes.items()} }"
+        )
+        print(
+            f"  roofline: compute={terms['compute_s']*1e3:.2f}ms memory={terms['memory_s']*1e3:.2f}ms "
+            f"collective={terms['collective_s']*1e3:.2f}ms dominant={rec['dominant']}"
+        )
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# sweep driver with incremental JSON persistence
+# ---------------------------------------------------------------------------
+
+
+def load_results(mesh_name: str) -> dict:
+    path = RESULTS_DIR / f"dryrun_{mesh_name}.json"
+    if path.exists():
+        return json.loads(path.read_text())
+    return {}
+
+
+def save_results(mesh_name: str, results: dict) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"dryrun_{mesh_name}.json"
+    path.write_text(json.dumps(results, indent=1, sort_keys=True))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--arch", default="all", help="'all' or comma-separated arch ids")
+    ap.add_argument("--shape", default="all", help="'all' or comma-separated shape names")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for mesh_name in meshes:
+        mesh_cfg = MeshConfig(multi_pod=(mesh_name == "multi"))
+        mesh = make_production_mesh(multi_pod=mesh_cfg.multi_pod)
+        results = load_results(mesh_name)
+        for arch in archs:
+            for shape_name in shapes:
+                key = f"{arch}|{shape_name}"
+                if key in results and not args.force and "error" not in results[key]:
+                    print(f"[{mesh_name}] {key}: cached ({results[key]['status']})")
+                    continue
+                print(f"[{mesh_name}] {key}: lowering...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, mesh_cfg, mesh)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    rec = {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": mesh_name,
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                results[key] = rec
+                save_results(mesh_name, results)
+                status = rec["status"]
+                extra = (
+                    f" lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s dom={rec.get('dominant')}"
+                    if status == "run"
+                    else ""
+                )
+                print(f"[{mesh_name}] {key}: {status}{extra}", flush=True)
+
+    # summary
+    for mesh_name in meshes:
+        results = load_results(mesh_name)
+        ok = sum(1 for r in results.values() if r["status"] == "run" and "error" not in r)
+        skip = sum(1 for r in results.values() if r["status"].startswith("skip"))
+        err = sum(1 for r in results.values() if r["status"] == "error")
+        print(f"[{mesh_name}] {ok} compiled, {skip} skipped (documented), {err} errors")
+
+
+if __name__ == "__main__":
+    main()

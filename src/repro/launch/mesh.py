@@ -1,0 +1,33 @@
+"""Production mesh construction (assignment-mandated shape).
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — only the dry-run
+launcher, which sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import, ever builds the full mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips) mesh.
+
+    Axis semantics: "pod" is the DCN boundary (data-parallel across pods),
+    "data" the intra-pod FSDP/DP axis, "model" the TP/EP/SP axis.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return make_production_mesh(multi_pod=cfg.multi_pod)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

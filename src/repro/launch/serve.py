@@ -1,0 +1,54 @@
+"""Serving launcher: continuous-batching engine over a synthetic request mix.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mistral-nemo-12b \\
+        --requests 12 --max-batch 4
+
+Runs the paper's inference QoS class end-to-end: online requests admitted
+ahead of offline backfill, per-request TTFT, engine utilization stats.
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model import reduce_for_smoke
+from repro.configs import ASSIGNED, get_config
+from repro.models import init_params
+from repro.serving import InferenceEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-nemo-12b", choices=ASSIGNED)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    if cfg.is_encoder_only:
+        raise SystemExit(f"{args.arch} is encoder-only; no decode serving")
+    params = init_params(cfg, jax.random.PRNGKey(args.seed), jnp.float32)
+    eng = InferenceEngine(cfg, params, max_batch=args.max_batch, max_seq=256, seed=args.seed)
+
+    rng = random.Random(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        prompt = [rng.randrange(2, cfg.vocab_size) for _ in range(rng.randint(2, 8))]
+        reqs.append(
+            eng.submit(prompt, max_new_tokens=args.max_new, online=(i % 3 != 0), temperature=0.0)
+        )
+    eng.run_until_drained()
+    for r in reqs:
+        kind = "online " if r.online else "offline"
+        print(f"req {r.req_id:3d} [{kind}] ttft={r.ttft*1e3:8.1f}ms len={len(r.generated)} head={r.generated[:6]}")
+    print("[serve] stats:", eng.stats())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Abstract input specs + per-cell run knobs for the dry-run.
+
+``input_specs(model_cfg, shape)`` returns weak-type-correct
+ShapeDtypeStruct stand-ins for every model input (tokens/labels for a train
+step, frames for the audio stub frontend, patch embeddings for the VLM stub,
+request batch + cache for decode) — no device allocation ever happens.
+
+``cell_knobs`` holds the per-(arch x shape) baseline execution knobs
+(microbatches, sequence parallelism, query chunking, precision policy) that
+make every cell fit the 16 GB/chip v5e budget.  The §Perf hillclimb iterates
+on these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (
+    MeshConfig,
+    ModelConfig,
+    ParallelConfig,
+    PrecisionConfig,
+    RunConfig,
+    ShapeConfig,
+    TrainConfig,
+    SHAPES,
+)
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs: dict = {}
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        specs["vision_tokens"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision.num_image_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    specs = train_input_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-cell knobs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CellKnobs:
+    num_microbatches: int = 1
+    sequence_parallel: bool = True
+    q_chunk: int = 1024
+    remat: str = "full"
+    # precision overrides (None = RunConfig defaults)
+    param_dtype: str | None = None
+    optimizer_dtype: str | None = None
+    grad_compression: str = "none"
+    optimizer_layer_scan: bool = False
+
+
+# Baseline knobs chosen by napkin math (activation bytes/device <= ~4 GB,
+# see EXPERIMENTS.md §Dry-run); hillclimbed cells get overrides in §Perf.
+TRAIN_KNOBS: dict[str, CellKnobs] = {
+    "rwkv6-7b": CellKnobs(num_microbatches=2),
+    "olmo-1b": CellKnobs(num_microbatches=1),
+    "mistral-nemo-12b": CellKnobs(num_microbatches=2),
+    "stablelm-12b": CellKnobs(num_microbatches=2),
+    "gemma-7b": CellKnobs(num_microbatches=4),
+    "hubert-xlarge": CellKnobs(num_microbatches=2),
+    # NOTE: optimizer_layer_scan measured WORSE on the CPU-XLA dry-run (scan
+    # ys double-buffer the whole stacked tree: arctic 39.9 -> 57.2 GB); the
+    # refuted hypothesis is logged in EXPERIMENTS.md §Perf.
+    "arctic-480b": CellKnobs(num_microbatches=8, param_dtype="bfloat16", optimizer_dtype="bfloat16"),
+    "qwen3-moe-235b-a22b": CellKnobs(num_microbatches=8, optimizer_dtype="bfloat16"),
+    "hymba-1.5b": CellKnobs(num_microbatches=2),
+    "llama-3.2-vision-90b": CellKnobs(num_microbatches=8, optimizer_dtype="bfloat16"),
+    "bert-large": CellKnobs(num_microbatches=1),
+}
+
+PREFILL_Q_CHUNK = 512
+
+
+def run_config_for(arch: str, shape: ShapeConfig, mesh: MeshConfig, knobs: CellKnobs | None = None) -> RunConfig:
+    knobs = knobs or (TRAIN_KNOBS.get(arch, CellKnobs()) if shape.kind == "train" else CellKnobs())
+    par = ParallelConfig(
+        # decode: weights are model-sharded and STATIONARY — FSDP sharding on
+        # the serving path makes XLA all-gather weight shards every step
+        # (arctic decode: 7.2 GB/step of wo gathers; §Perf iteration 3)
+        fsdp=shape.kind != "decode",
+        tensor_parallel=True,
+        sequence_parallel=knobs.sequence_parallel and shape.kind != "decode",
+        num_microbatches=knobs.num_microbatches if shape.kind == "train" else 1,
+        remat=knobs.remat if shape.kind == "train" else "none",
+        grad_compression=knobs.grad_compression,
+        optimizer_layer_scan=knobs.optimizer_layer_scan,
+    )
+    prec = PrecisionConfig(
+        param_dtype=(knobs.param_dtype or ("bfloat16" if shape.kind != "train" else "float32")),
+        optimizer_dtype=knobs.optimizer_dtype or "float32",
+    )
+    tr = TrainConfig(global_batch=shape.global_batch, seq_len=shape.seq_len)
+    return RunConfig(arch=arch, mesh=mesh, parallel=par, precision=prec, train=tr)
+
+
+# ---------------------------------------------------------------------------
+# cell enumeration with the assignment's skip rules
+# ---------------------------------------------------------------------------
+
+
+def cell_status(cfg: ModelConfig, shape_name: str) -> str:
+    """'run' | reason-for-skip (documented in DESIGN.md §Arch-applicability)."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and cfg.is_encoder_only:
+        return "skip: encoder-only (no autoregressive decode step)"
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return "skip: pure full-attention arch (no sub-quadratic mechanism)"
+    return "run"
+
+
+def enumerate_cells(archs: list[str]) -> list[tuple[str, str, str]]:
+    """[(arch, shape_name, status)] over the full 40-cell grid."""
+    from repro.configs import get_config
+
+    cells = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            cells.append((arch, shape_name, cell_status(cfg, shape_name)))
+    return cells

@@ -1,0 +1,27 @@
+from repro.models.initializers import (
+    abstract_params,
+    init_params,
+    param_logical_axes,
+    param_specs,
+)
+from repro.models.model import decode_step, forward, prefill
+from repro.models.cache import (
+    abstract_cache,
+    cache_bytes,
+    init_cache,
+    stacked_cache_axes,
+)
+
+__all__ = [
+    "abstract_params",
+    "init_params",
+    "param_logical_axes",
+    "param_specs",
+    "decode_step",
+    "forward",
+    "prefill",
+    "abstract_cache",
+    "cache_bytes",
+    "init_cache",
+    "stacked_cache_axes",
+]

@@ -1,0 +1,271 @@
+"""Attention: GQA/MQA self-attention, sliding window, cross-attention, decode.
+
+Two execution paths:
+
+* ``xla``   — pure-jnp attention with optional *query chunking* (a lax.scan over
+  query blocks with a full softmax per block).  Memory is bounded by
+  ``q_chunk x kv_len`` instead of ``q_len x kv_len``, which is what makes the
+  32k prefill cells lowerable within a v5e HBM budget.  This is the path the
+  dry-run lowers.
+* ``flash`` — the Pallas TPU kernel in ``repro.kernels.flash_attention``
+  (online-softmax VMEM tiling).  Selected via ``impl="flash"``; validated in
+  interpret mode on CPU.
+
+Shapes follow the (batch, seq, heads, head_dim) convention throughout.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, apply_norm, apply_rope, softcap
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg, *, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        specs["bq"] = ParamSpec((H, hd), ("heads", "head_dim"), "zeros")
+        specs["bk"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bv"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bo"] = ParamSpec((D,), ("embed",), "zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), "ones")
+    if cross:
+        # Llama-3.2-vision style gating: cross-attn output enters the residual
+        # through a zero-initialized tanh gate.
+        specs["gate"] = ParamSpec((1,), (None,), "zeros")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg, p, x, kv_x=None):
+    """Project to q,k,v. kv_x: source for k/v (cross-attention)."""
+    kv_src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(x.dtype))
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = _rms_head(q, p["q_norm"], cfg.norm_eps)
+        k = _rms_head(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rms_head(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _out(cfg, p, ctx, dtype):
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(dtype))
+    if cfg.use_bias:
+        out = out + p["bo"].astype(dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# core attention math (grouped heads, fp32 softmax)
+# ---------------------------------------------------------------------------
+
+
+def _scores(q, k, q_per_kv, scale):
+    """q: (B,Sq,H,hd), k: (B,Skv,KV,hd) -> (B,KV,G,Sq,Skv) fp32."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, Sq, KV, q_per_kv, hd)
+    s = jnp.einsum("bqhgk,bshk->bhgqs", qg, k)
+    return s.astype(jnp.float32) * scale
+
+
+def _attend_block(cfg, q, k, v, mask, q_per_kv):
+    """Exact softmax attention for one (possibly chunked) query block.
+
+    mask: (B?, 1, 1, Sq, Skv) additive fp32 mask (0 / NEG_INF).
+    """
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    s = _scores(q, k, q_per_kv, scale)
+    if cfg.attn_logit_softcap > 0:
+        s = softcap(s, cfg.attn_logit_softcap)
+    s = s + mask
+    w = jax.nn.softmax(s, axis=-1)
+    B, Sq = q.shape[0], q.shape[1]
+    ctx = jnp.einsum("bhgqs,bshk->bqhgk", w.astype(v.dtype), v)
+    return ctx.reshape(B, Sq, cfg.num_heads, cfg.head_dim)
+
+
+def make_mask(q_pos, kv_pos, *, causal: bool, window: int) -> jax.Array:
+    """Additive mask (..., Sq, Skv) from absolute positions."""
+    rel = q_pos[..., :, None] - kv_pos[..., None, :]  # q - kv
+    ok = jnp.ones(rel.shape, bool)
+    if causal:
+        ok &= rel >= 0
+    if window > 0:
+        ok &= rel < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def self_attention(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array | None = None,
+    q_chunk: int = 0,
+    impl: str = "xla",
+    sh=None,
+) -> jax.Array:
+    """Full-sequence self-attention (training / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.rotary_pct > 0 and not cfg.learned_pos_embedding:
+        q = apply_rope(q, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+    if sh is not None:
+        q = sh(q, ("batch", "seq", "heads", None))
+        # K/V: head-sharded when kv_heads divides the model axis, else
+        # REPLICATED (Megatron GQA duplication).  The seq-parallel fallback
+        # is deliberately absent: seq-sharded K/V against head-sharded scores
+        # forces XLA into "involuntary full rematerialization" reshards
+        # inside every layer loop (measured 80+ s collective term on
+        # mistral-nemo train_4k — EXPERIMENTS.md §Perf iteration 1).
+        k = sh(k, ("batch", None, "kv_heads", None))
+        v = sh(v, ("batch", None, "kv_heads", None))
+
+    if impl == "flash":
+        from repro.kernels import flash_attention_ops
+
+        ctx = flash_attention_ops.flash_attention(
+            q, k, v, causal=cfg.causal, window=cfg.sliding_window, softcap=cfg.attn_logit_softcap
+        )
+        return _out(cfg, p, ctx, x.dtype)
+
+    qpk = cfg.q_per_kv
+    if q_chunk and S > q_chunk and S % q_chunk == 0:
+        nchunk = S // q_chunk
+        qs = q.reshape(B, nchunk, q_chunk, cfg.num_heads, cfg.head_dim).transpose(1, 0, 2, 3, 4)
+        pos_q = positions.reshape(B, nchunk, q_chunk).transpose(1, 0, 2)
+
+        def body(carry, inp):
+            qc, pq = inp
+            m = make_mask(pq, positions, causal=cfg.causal, window=cfg.sliding_window)
+            m = m[:, None, None]  # (B,1,1,qc,S)
+            return carry, _attend_block(cfg, qc, k, v, m, qpk)
+
+        # remat: without it the scan saves every chunk's (qc x S) score matrix
+        _, ctx = jax.lax.scan(jax.checkpoint(body), None, (qs, pos_q))
+        ctx = ctx.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    else:
+        m = make_mask(positions, positions, causal=cfg.causal, window=cfg.sliding_window)
+        ctx = _attend_block(cfg, q, k, v, m[:, None, None], qpk)
+    if sh is not None:
+        ctx = sh(ctx, ("batch", "seq", "heads", None))
+    return _out(cfg, p, ctx, x.dtype)
+
+
+def cross_attention(cfg, p: dict, x: jax.Array, kv_tokens: jax.Array, *, sh=None) -> jax.Array:
+    """Cross-attention onto (unpositioned) vision tokens, with tanh gating."""
+    q, k, v = _qkv(cfg, p, x, kv_x=kv_tokens)
+    B, Sq = x.shape[:2]
+    zero = jnp.zeros((B, 1, 1, Sq, kv_tokens.shape[1]), jnp.float32)
+    ctx = _attend_block(cfg, q, k, v, zero, cfg.q_per_kv)
+    out = _out(cfg, p, ctx, x.dtype)
+    return jnp.tanh(p["gate"].astype(x.dtype)) * out
+
+
+def prefill_attention(cfg, p, x, *, positions=None, q_chunk: int = 0, sh=None):
+    """Self-attention that also returns the K/V tensors for the cache."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.rotary_pct > 0 and not cfg.learned_pos_embedding:
+        q = apply_rope(q, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+    qpk = cfg.q_per_kv
+    if q_chunk and S > q_chunk and S % q_chunk == 0:
+        nchunk = S // q_chunk
+        qs = q.reshape(B, nchunk, q_chunk, cfg.num_heads, cfg.head_dim).transpose(1, 0, 2, 3, 4)
+        pos_q = positions.reshape(B, nchunk, q_chunk).transpose(1, 0, 2)
+
+        def body(carry, inp):
+            qc, pq = inp
+            m = make_mask(pq, positions, causal=cfg.causal, window=cfg.sliding_window)
+            return carry, _attend_block(cfg, qc, k, v, m[:, None, None], qpk)
+
+        _, ctx = jax.lax.scan(jax.checkpoint(body), None, (qs, pos_q))
+        ctx = ctx.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    else:
+        m = make_mask(positions, positions, causal=cfg.causal, window=cfg.sliding_window)
+        ctx = _attend_block(cfg, q, k, v, m[:, None, None], qpk)
+    return _out(cfg, p, ctx, x.dtype), k, v
+
+
+def decode_attention(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    cache_pos: jax.Array,
+    pos: jax.Array,
+    *,
+    sh=None,
+):
+    """Single-token decode against a (possibly ring-buffered) KV cache.
+
+    x:        (B, 1, D) current token embedding stream
+    cache_k/v:(B, W, KV, hd) cache buffer (W = full seq or sliding window)
+    cache_pos:(B, W) absolute position held in each slot (-1 = empty)
+    pos:      (B,) absolute position of the current token
+    Returns (out, new_k, new_v, new_cache_pos).
+    """
+    B, W = cache_pos.shape
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.rotary_pct > 0 and not cfg.learned_pos_embedding:
+        q = apply_rope(q, pos[:, None], rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+
+    slot = pos % W  # ring-buffer slot (full cache: W >= S so slot == pos)
+    b_idx = jnp.arange(B)
+    # scatter write: fuses into an in-place update on the donated cache buffer
+    new_k = cache_k.at[b_idx, slot].set(k[:, 0].astype(cache_k.dtype))
+    new_v = cache_v.at[b_idx, slot].set(v[:, 0].astype(cache_v.dtype))
+    new_cache_pos = cache_pos.at[b_idx, slot].set(pos)
+
+    m = make_mask(pos[:, None], new_cache_pos, causal=cfg.causal, window=cfg.sliding_window)
+    m = jnp.where(new_cache_pos[:, None, :] < 0, NEG_INF, m)  # empty slots
+    ctx = _attend_block(cfg, q, new_k, new_v, m[:, None, None], cfg.q_per_kv)
+    return _out(cfg, p, ctx, x.dtype), new_k, new_v, new_cache_pos

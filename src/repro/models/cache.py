@@ -1,0 +1,218 @@
+"""Decode-state (KV cache / recurrent state) structures, per family.
+
+Caches are stacked over layers (leading L dim) so the decode step can scan
+over (layer_params, layer_cache) pairs.  Every builder has a concrete
+(``init_cache``) and an abstract (``abstract_cache``) twin — the latter feeds
+the dry-run's ``jit(...).lower()`` without allocating 32k-token caches on the
+host.  ``cache_logical_axes`` mirrors the tree with logical-axis tuples for
+the sharding rule engine.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ssm as ssm_mod
+
+
+def cache_window(cfg, seq_len: int) -> int:
+    """Slots the attention cache needs for a decode run of length seq_len."""
+    if cfg.sliding_window > 0:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def _attn_entry(cfg, B: int, W: int, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": ((B, W, KV, hd), dtype),
+        "v": ((B, W, KV, hd), dtype),
+        "pos": ((B, W), jnp.int32),
+    }
+
+
+def _attn_axes():
+    return {
+        "k": ("kv_batch", "kv_seq", "kv_heads", None),
+        "v": ("kv_batch", "kv_seq", "kv_heads", None),
+        "pos": ("kv_batch", "kv_seq"),
+    }
+
+
+def layer_cache_layout(cfg, B: int, seq_len: int, dtype) -> dict:
+    """(shape, dtype) tree for ONE layer's cache."""
+    W = cache_window(cfg, seq_len)
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _attn_entry(cfg, B, W, dtype)
+    if fam == "ssm":
+        H, n = cfg.num_heads, cfg.rwkv.head_size
+        D = cfg.d_model
+        return {
+            "tm_x": ((B, D), dtype),
+            "cm_x": ((B, D), dtype),
+            "state": ((B, H, n, n), jnp.float32),
+        }
+    if fam == "hybrid":
+        H, P = cfg.num_heads, ssm_mod.head_dim_inner(cfg)
+        di, K, N = ssm_mod.d_inner(cfg), cfg.ssm.conv_width, cfg.ssm.state_size
+        ent = _attn_entry(cfg, B, W, dtype)
+        ent.update(
+            {
+                "conv": ((B, K - 1, di), dtype),
+                "ssm": ((B, H, P, N), jnp.float32),
+            }
+        )
+        return ent
+    if fam == "vlm":
+        g = cfg.vision.cross_attn_every - 1  # self layers per group
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        self_ent = _attn_entry(cfg, B, W, dtype)
+        return {
+            "self": {k: ((g,) + s, d) for k, (s, d) in self_ent.items()},
+            "cross": {
+                "ck": ((B, cfg.vision.num_image_tokens, KV, hd), dtype),
+                "cv": ((B, cfg.vision.num_image_tokens, KV, hd), dtype),
+            },
+        }
+    raise ValueError(f"no decode cache for family {fam!r} ({cfg.name})")
+
+
+def cache_logical_axes(cfg) -> dict:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _attn_axes()
+    if fam == "ssm":
+        return {
+            "tm_x": ("kv_batch", "embed"),
+            "cm_x": ("kv_batch", "embed"),
+            "state": ("kv_batch", "heads", None, None),
+        }
+    if fam == "hybrid":
+        ax = _attn_axes()
+        ax.update(
+            {
+                "conv": ("kv_batch", None, "ssm_inner"),
+                "ssm": ("kv_batch", "heads", None, None),
+            }
+        )
+        return ax
+    if fam == "vlm":
+        sax = {k: ("layers_inner",) + v for k, v in _attn_axes().items()}
+        return {
+            "self": sax,
+            "cross": {
+                "ck": ("kv_batch", None, "kv_heads", None),
+                "cv": ("kv_batch", None, "kv_heads", None),
+            },
+        }
+    raise ValueError(fam)
+
+
+def raw_cache_axes(cfg) -> dict:
+    """Logical axes of the cache tree *as returned by prefill* (full-length
+    K/V stacked over layers, no position ring buffer)."""
+    fam = cfg.family
+    kv = lambda: {
+        "k": ("layers", "kv_batch", "kv_seq", "kv_heads", None),
+        "v": ("layers", "kv_batch", "kv_seq", "kv_heads", None),
+    }
+    if fam in ("dense", "moe", "audio"):
+        return kv()
+    if fam == "ssm":
+        return {
+            "tm_x": ("layers", "kv_batch", "embed"),
+            "cm_x": ("layers", "kv_batch", "embed"),
+            "state": ("layers", "kv_batch", "heads", None, None),
+        }
+    if fam == "hybrid":
+        ax = kv()
+        ax.update(
+            {
+                "conv": ("layers", "kv_batch", None, "ssm_inner"),
+                "ssm": ("layers", "kv_batch", "heads", None, None),
+            }
+        )
+        return ax
+    if fam == "vlm":
+        sax = {k: ("layers", "layers_inner") + v[1:] for k, v in kv().items()}
+        return {
+            "self": sax,
+            "cross": {
+                "ck": ("layers", "kv_batch", None, "kv_heads", None),
+                "cv": ("layers", "kv_batch", None, "kv_heads", None),
+            },
+        }
+    raise ValueError(fam)
+
+
+def num_scan_groups(cfg) -> int:
+    """Leading scan dim of the stacked block params / cache."""
+    if cfg.family == "vlm":
+        assert cfg.num_layers % cfg.vision.cross_attn_every == 0
+        return cfg.num_layers // cfg.vision.cross_attn_every
+    return cfg.num_layers
+
+
+def _stack(layout: dict, L: int):
+    return jax.tree.map(
+        lambda sd: ((L,) + sd[0], sd[1]),
+        layout,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple),
+    )
+
+
+def stacked_cache_layout(cfg, B: int, seq_len: int, dtype) -> dict:
+    return _stack(layer_cache_layout(cfg, B, seq_len, dtype), num_scan_groups(cfg))
+
+
+def _is_layout_leaf(x):
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+
+
+def abstract_cache(cfg, B: int, seq_len: int, dtype):
+    lay = stacked_cache_layout(cfg, B, seq_len, dtype)
+    return jax.tree.map(lambda sd: jax.ShapeDtypeStruct(*sd), lay, is_leaf=_is_layout_leaf)
+
+
+def init_cache(cfg, B: int, seq_len: int, dtype):
+    lay = stacked_cache_layout(cfg, B, seq_len, dtype)
+
+    def make(path_leaf):
+        shape, dt = path_leaf
+        return jnp.zeros(shape, dt)
+
+    cache = jax.tree.map(make, lay, is_leaf=_is_layout_leaf)
+    # position buffers start empty (-1)
+    return _reset_pos(cache)
+
+
+def _reset_pos(cache):
+    def fix(path, leaf):
+        if path and path[-1] == "pos":
+            return jnp.full(leaf.shape, -1, leaf.dtype)
+        return leaf
+
+    from repro.utils.pytree import tree_map_with_path
+
+    return tree_map_with_path(lambda p, l: fix(p.split("/"), l), cache)
+
+
+def stacked_cache_axes(cfg) -> dict:
+    """Logical axes for the STACKED cache (leading 'layers')."""
+    ax = cache_logical_axes(cfg)
+    return jax.tree.map(
+        lambda t: ("layers",) + t,
+        ax,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def cache_bytes(cfg, B: int, seq_len: int, dtype) -> int:
+    lay = stacked_cache_layout(cfg, B, seq_len, dtype)
+    total = 0
+    for shape, dt in jax.tree.leaves(lay, is_leaf=_is_layout_leaf):
+        total += int(np.prod(shape, dtype=np.int64)) * np.dtype(dt).itemsize
+    return total

@@ -1,0 +1,54 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (GELU/SiLU/ReLU^2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACTIVATIONS, ParamSpec
+
+
+def is_gated(activation: str) -> bool:
+    return activation in ("swiglu", "geglu")
+
+
+def gate_fn(activation: str):
+    if activation == "swiglu":
+        return jax.nn.silu
+    if activation == "geglu":
+        return jax.nn.gelu
+    return ACTIVATIONS[activation]
+
+
+def ffn_specs(cfg, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    specs = {}
+    if is_gated(cfg.activation):
+        specs["w_gate"] = ParamSpec((D, F), ("embed", "mlp"))
+        specs["w_up"] = ParamSpec((D, F), ("embed", "mlp"))
+    else:
+        specs["w_up"] = ParamSpec((D, F), ("embed", "mlp"))
+    specs["w_down"] = ParamSpec((F, D), ("mlp", "embed"))
+    if cfg.use_bias:
+        specs["b_up"] = ParamSpec((F,), ("mlp",), "zeros")
+        specs["b_down"] = ParamSpec((D,), ("embed",), "zeros")
+    return specs
+
+
+def ffn(cfg, p: dict, x: jax.Array, *, sh=None) -> jax.Array:
+    act = gate_fn(cfg.activation)
+    up = x @ p["w_up"].astype(x.dtype)
+    if cfg.use_bias:
+        up = up + p["b_up"].astype(x.dtype)
+    if is_gated(cfg.activation):
+        gate = act(x @ p["w_gate"].astype(x.dtype))
+        h = gate * up
+    else:
+        h = act(up)
+    if sh is not None:
+        h = sh(h, ("batch", "seq", "mlp"))
+    out = h @ p["w_down"].astype(x.dtype)
+    if cfg.use_bias:
+        out = out + p["b_down"].astype(x.dtype)
+    return out

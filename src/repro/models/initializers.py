@@ -1,0 +1,71 @@
+"""Whole-model ParamSpec assembly, initialization and abstract twins."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.cache import num_scan_groups
+from repro.models.layers import ParamSpec, abstract_tree, init_tree, is_spec, norm_specs, spec_tree_map
+
+
+def _stack_specs(specs, n: int, axis_name: str = "layers"):
+    return spec_tree_map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale), specs
+    )
+
+
+def block_specs(cfg) -> dict:
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        return B.dense_block_specs(cfg)
+    if fam == "moe":
+        return B.moe_block_specs(cfg)
+    if fam == "ssm":
+        return B.rwkv_block_specs(cfg)
+    if fam == "hybrid":
+        return B.hybrid_block_specs(cfg)
+    if fam == "vlm":
+        g = cfg.vision.cross_attn_every - 1
+        return {
+            "self": _stack_specs(B.dense_block_specs(cfg), g, "layers_inner"),
+            "cross": B.cross_block_specs(cfg),
+        }
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def param_specs(cfg) -> dict:
+    D, V = cfg.d_model, cfg.padded_vocab
+    specs: dict = {}
+    if cfg.family == "audio":
+        specs["embed"] = {
+            "frame_proj": ParamSpec((D, D), ("embed", "heads_x_dim")),
+            "pos": ParamSpec((cfg.max_position, D), (None, "embed"), "normal"),
+        }
+    else:
+        # vocab tables shard ONLY over "model" on the vocab dim ("embed_v" is
+        # never sharded): a table whose embed dim is FSDP-sharded forces XLA
+        # to all-gather the whole fp32 table around the gather/logits ops
+        # (measured 4.2 GB/device x4 copies on llama-90b).
+        specs["embed"] = {"tok": ParamSpec((V, D), ("vocab", "embed_v"), "normal")}
+        if cfg.learned_pos_embedding:
+            specs["embed"]["pos"] = ParamSpec((cfg.max_position, D), (None, "embed_v"), "normal")
+    specs["blocks"] = _stack_specs(block_specs(cfg), num_scan_groups(cfg))
+    specs["final_norm"] = norm_specs(cfg)
+    if not cfg.tie_embeddings or cfg.family == "audio":
+        specs["lm_head"] = ParamSpec((D, V), ("embed_v", "vocab"))
+    return specs
+
+
+def init_params(cfg, key: jax.Array, dtype=jnp.float32):
+    return init_tree(param_specs(cfg), key, dtype)
+
+
+def abstract_params(cfg, dtype=jnp.float32):
+    return abstract_tree(param_specs(cfg), dtype)
+
+
+def param_logical_axes(cfg):
+    """Tree of logical-axis tuples matching param_specs."""
+    return spec_tree_map(lambda s: s.axes, param_specs(cfg))

@@ -1,0 +1,282 @@
+"""The full model: embedding -> scanned block stack -> head.
+
+Three entry points, all pure functions of (cfg, params, batch):
+
+* ``forward``     — training forward pass: (logits, aux_loss)
+* ``prefill``     — inference prefill: (last-position logits, stacked cache)
+* ``decode_step`` — one-token decode:  (logits, new cache)
+
+The block stack is a ``lax.scan`` over stacked (L, ...) parameters with a
+configurable activation-checkpoint policy, so HLO size (and CPU compile time
+in the dry-run) is independent of depth.  VLM architectures scan over
+*layer groups* (cross_attn_every-1 self layers + 1 cross layer).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.layers import apply_norm, softcap
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "nothing_saveable",
+    "dots": "checkpoint_dots",
+    "dots_no_batch": "checkpoint_dots_with_no_batch_dims",
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    policy = REMAT_POLICIES[remat]
+    if policy == "nothing_saveable":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=getattr(jax.checkpoint_policies, policy))
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_input(cfg, params, batch, *, sh=None):
+    """Returns (x, positions). batch keys: tokens|frames [, positions]."""
+    e = params["embed"]
+    if cfg.family == "audio":
+        frames = batch["frames"]
+        x = frames @ e["frame_proj"].astype(frames.dtype)
+        S = x.shape[1]
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), x.shape[:2])
+        x = x + e["pos"][:S][None].astype(x.dtype)
+    else:
+        tokens = batch["tokens"]
+        x = jnp.take(e["tok"], tokens, axis=0)
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
+        if cfg.learned_pos_embedding:
+            x = x + jnp.take(e["pos"], pos, axis=0).astype(x.dtype)
+        if cfg.scale_embedding:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if sh is not None:
+        x = sh(x, ("batch", "seq", "embed"))
+    return x, pos
+
+
+def lm_logits(cfg, params, x, *, logits_dtype=jnp.float32, sh=None):
+    """Final norm + output projection (tied or untied; padded-vocab mask)."""
+    x = apply_norm(cfg, params["final_norm"], x)
+    if sh is not None:
+        # logits must be VOCAB-sharded, not seq-sharded: inheriting the
+        # sequence-parallel sharding forces XLA to all-gather the fp32 vocab
+        # table (measured 2.7 GB/device x several copies on mistral-nemo)
+        x = sh(x, ("batch",) + ("seq_unsharded",) * (x.ndim - 2) + ("embed",))
+    if "lm_head" in params:
+        w = params["lm_head"].astype(x.dtype)
+        logits = x @ w
+    else:
+        w = params["embed"]["tok"].astype(x.dtype)
+        logits = jnp.einsum("...d,vd->...v", x, w)
+    logits = logits.astype(logits_dtype)
+    if sh is not None:
+        logits = sh(logits, ("batch",) + ("seq_unsharded",) * (logits.ndim - 2) + ("vocab",))
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask the alignment-padding columns (never predicted / never labeled)
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col >= cfg.vocab_size, jnp.asarray(-1e9, logits.dtype), logits)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# block-stack runners
+# ---------------------------------------------------------------------------
+
+
+def _train_body(cfg, *, positions, q_chunk, sh, attn_impl, vision_tokens=None):
+    fam = cfg.family
+    kw = dict(positions=positions, q_chunk=q_chunk, sh=sh, attn_impl=attn_impl)
+
+    if fam in ("dense", "audio"):
+
+        def body(carry, p_layer):
+            return (B.dense_block(cfg, p_layer, carry[0], **kw), carry[1]), None
+
+    elif fam == "moe":
+
+        def body(carry, p_layer):
+            x, aux = carry
+            x, a = B.moe_block(cfg, p_layer, x, **kw)
+            return (x, aux + a), None
+
+    elif fam == "ssm":
+
+        def body(carry, p_layer):
+            return (B.rwkv_block(cfg, p_layer, carry[0], sh=sh), carry[1]), None
+
+    elif fam == "hybrid":
+
+        def body(carry, p_layer):
+            return (B.hybrid_block(cfg, p_layer, carry[0], **kw), carry[1]), None
+
+    elif fam == "vlm":
+
+        def body(carry, p_group):
+            x, aux = carry
+
+            def self_body(xc, p_layer):
+                return B.dense_block(cfg, p_layer, xc, **kw), None
+
+            x, _ = jax.lax.scan(self_body, x, p_group["self"])
+            x = B.cross_block(cfg, p_group["cross"], x, vision_tokens, sh=sh)
+            return (x, aux), None
+
+    else:
+        raise ValueError(fam)
+    return body
+
+
+def forward(cfg, params, batch, *, sh=None, q_chunk=0, remat="none", attn_impl="xla", compute_dtype=None):
+    """Training forward. Returns (logits, aux_loss).
+
+    ``compute_dtype``: cast the activation stream (not the master weights) —
+    every weight use casts its own layer slice via ``.astype(x.dtype)``, which
+    keeps the stacked fp32 params (and their gradients) on the FSDP sharding
+    through the layer scan instead of materializing an unsharded bf16 tree.
+    """
+    x, positions = embed_input(cfg, params, batch, sh=sh)
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+    vision_tokens = batch.get("vision_tokens")
+    if vision_tokens is not None and compute_dtype is not None:
+        vision_tokens = vision_tokens.astype(compute_dtype)
+    body = _train_body(
+        cfg, positions=positions, q_chunk=q_chunk, sh=sh, attn_impl=attn_impl, vision_tokens=vision_tokens
+    )
+    body = _maybe_remat(body, remat)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    logits = lm_logits(cfg, params, x, sh=sh)
+    return logits, aux / cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg, params, batch, *, sh=None, q_chunk=0, remat="none"):
+    """Inference prefill. Returns (last-position logits (B,V), raw cache).
+
+    The raw cache holds full-length K/V; ``repro.serving.kvcache`` converts it
+    into the ring-buffered decode cache.
+    """
+    x, positions = embed_input(cfg, params, batch, sh=sh)
+    vision_tokens = batch.get("vision_tokens")
+    fam = cfg.family
+    kw = dict(positions=positions, q_chunk=q_chunk, sh=sh)
+
+    if fam in ("dense", "audio"):
+
+        def body(x, p_layer):
+            return B.dense_block_prefill(cfg, p_layer, x, **kw)
+
+    elif fam == "moe":
+
+        def body(x, p_layer):
+            return B.moe_block_prefill(cfg, p_layer, x, **kw)
+
+    elif fam == "ssm":
+
+        def body(x, p_layer):
+            return B.rwkv_block_prefill(cfg, p_layer, x, sh=sh)
+
+    elif fam == "hybrid":
+
+        def body(x, p_layer):
+            return B.hybrid_block_prefill(cfg, p_layer, x, **kw)
+
+    elif fam == "vlm":
+
+        def body(x, p_group):
+            def self_body(xc, p_layer):
+                return B.dense_block_prefill(cfg, p_layer, xc, **kw)
+
+            x, self_cache = jax.lax.scan(self_body, x, p_group["self"])
+            x, cross_cache = B.cross_block_prefill(cfg, p_group["cross"], x, vision_tokens, sh=sh)
+            return x, {"self": self_cache, "cross": cross_cache}
+
+    else:
+        raise ValueError(fam)
+
+    body = _maybe_remat(body, remat)
+    x, raw_cache = jax.lax.scan(body, x, params["blocks"])
+    logits = lm_logits(cfg, params, x[:, -1:], sh=sh)[:, 0]
+    return logits, raw_cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg, params, cache, token, pos, *, sh=None):
+    """One decode step.
+
+    token: (B, 1) int32 (ignored dims for audio); pos: (B,) int32 absolute
+    position of this token.  Returns (logits (B, V), new cache).
+    """
+    if cfg.is_encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    batch = {"tokens": token, "positions": pos[:, None]}
+    x, _ = embed_input(cfg, params, batch, sh=sh)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        step = B.dense_block_decode if fam == "dense" else B.moe_block_decode
+
+        def body(x, xs):
+            p_layer, c_layer = xs
+            x, nc = step(cfg, p_layer, x, c_layer, pos, sh=sh)
+            return x, nc
+
+    elif fam == "ssm":
+
+        def body(x, xs):
+            p_layer, c_layer = xs
+            x, nc = B.rwkv_block_decode(cfg, p_layer, x, c_layer, pos, sh=sh)
+            return x, nc
+
+    elif fam == "hybrid":
+
+        def body(x, xs):
+            p_layer, c_layer = xs
+            x, nc = B.hybrid_block_decode(cfg, p_layer, x, c_layer, pos, sh=sh)
+            return x, nc
+
+    elif fam == "vlm":
+
+        def body(x, xs):
+            p_group, c_group = xs
+
+            def self_body(xc, inner):
+                p_layer, c_layer = inner
+                xc, nc = B.dense_block_decode(cfg, p_layer, xc, c_layer, pos, sh=sh)
+                return xc, nc
+
+            x, new_self = jax.lax.scan(self_body, x, (p_group["self"], c_group["self"]))
+            x, new_cross = B.cross_block_decode(cfg, p_group["cross"], x, c_group["cross"], sh=sh)
+            return x, {"self": new_self, "cross": new_cross}
+
+    else:
+        raise ValueError(fam)
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    logits = lm_logits(cfg, params, x[:, 0], sh=sh)
+    return logits, new_cache

@@ -1,0 +1,225 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+arXiv:2404.05892.  The per-head recurrence (head size n):
+
+    S_t   = diag(w_t) . S_{t-1} + k_t v_t^T          (state: n x n)
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+
+with w_t = exp(-exp(ww_t)) a *data-dependent* per-channel decay (the Finch
+novelty vs RWKV5), and all of r,k,v,g,ww produced from token-shifted inputs
+through low-rank adapters.
+
+Training/prefill uses a **chunked parallel formulation** (GLA-style):
+within a chunk of length L the pairwise decay tensor
+``exp(la_{t-1} - la_s)`` (s <= t-1, always <= 0 in log space, hence safe)
+is materialized per head, giving matmul-shaped work for the MXU; the state is
+carried across chunks with a lax.scan.  ``repro/kernels/rwkv6_scan.py`` is the
+Pallas version of the same scheme; ``repro/kernels/rwkv6_ref.py`` holds the
+sequential oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ffn import ffn_specs
+from repro.models.layers import ParamSpec, group_norm_heads
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def time_mix_specs(cfg) -> dict:
+    D = cfg.d_model
+    r = cfg.rwkv
+    H, n = cfg.num_heads, r.head_size
+    assert H * n == D, f"rwkv: heads({H}) * head_size({n}) != d_model({D})"
+    return {
+        "maa_x": ParamSpec((D,), ("embed",), "zeros"),
+        "maa_w": ParamSpec((D,), ("embed",), "zeros"),
+        "maa_k": ParamSpec((D,), ("embed",), "zeros"),
+        "maa_v": ParamSpec((D,), ("embed",), "zeros"),
+        "maa_r": ParamSpec((D,), ("embed",), "zeros"),
+        "maa_g": ParamSpec((D,), ("embed",), "zeros"),
+        "maa_w1": ParamSpec((D, 5 * r.lora_rank_mix), ("embed", None), "normal", 0.1),
+        "maa_w2": ParamSpec((5, r.lora_rank_mix, D), (None, None, "embed"), "normal", 0.1),
+        "decay": ParamSpec((D,), ("embed",), "rwkv_decay"),
+        "decay_w1": ParamSpec((D, r.lora_rank_decay), ("embed", None), "normal", 0.1),
+        "decay_w2": ParamSpec((r.lora_rank_decay, D), (None, "embed"), "normal", 0.1),
+        "bonus": ParamSpec((H, n), ("heads", None), "normal"),  # "u" / time_faaaa
+        "w_r": ParamSpec((D, D), ("embed", "heads_x_dim")),
+        "w_k": ParamSpec((D, D), ("embed", "heads_x_dim")),
+        "w_v": ParamSpec((D, D), ("embed", "heads_x_dim")),
+        "w_g": ParamSpec((D, D), ("embed", "heads_x_dim")),
+        "w_o": ParamSpec((D, D), ("heads_x_dim", "embed")),
+        "ln_x_scale": ParamSpec((D,), ("embed",), "ones"),
+        "ln_x_bias": ParamSpec((D,), ("embed",), "zeros"),
+    }
+
+
+def channel_mix_specs(cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "maa_k": ParamSpec((D,), ("embed",), "zeros"),
+        "maa_r": ParamSpec((D,), ("embed",), "zeros"),
+        "w_k": ParamSpec((D, F), ("embed", "mlp")),
+        "w_v": ParamSpec((F, D), ("mlp", "embed")),
+        "w_r": ParamSpec((D, D), ("embed", "heads_x_dim")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# token shift
+# ---------------------------------------------------------------------------
+
+
+def token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream; ``prev`` is the last token of the previous segment."""
+    B = x.shape[0]
+    if prev is None:
+        prev = jnp.zeros((B, 1, x.shape[-1]), x.dtype)
+    else:
+        prev = prev.reshape(B, 1, x.shape[-1]).astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# time mix
+# ---------------------------------------------------------------------------
+
+
+def _projections(cfg, p, x, x_prev):
+    """Token-shifted, LoRA-mixed projections -> r,k,v,g,logw (all (B,S,...))."""
+    dt = x.dtype
+    sx = x_prev - x
+    xxx = x + sx * p["maa_x"].astype(dt)
+    B, S, D = x.shape
+    r_mix = cfg.rwkv.lora_rank_mix
+    a = jnp.tanh(xxx @ p["maa_w1"].astype(dt)).reshape(B, S, 5, r_mix)
+    mixes = jnp.einsum("bsfr,frd->bsfd", a, p["maa_w2"].astype(dt))  # (B,S,5,D)
+    mw, mk, mv, mr, mg = [mixes[:, :, i] for i in range(5)]
+    xw = x + sx * (p["maa_w"].astype(dt) + mw)
+    xk = x + sx * (p["maa_k"].astype(dt) + mk)
+    xv = x + sx * (p["maa_v"].astype(dt) + mv)
+    xr = x + sx * (p["maa_r"].astype(dt) + mr)
+    xg = x + sx * (p["maa_g"].astype(dt) + mg)
+
+    r = xr @ p["w_r"].astype(dt)
+    k = xk @ p["w_k"].astype(dt)
+    v = xv @ p["w_v"].astype(dt)
+    g = jax.nn.silu(xg @ p["w_g"].astype(dt))
+    # data-dependent decay, fp32: logw = -exp(ww) <= 0
+    ww = p["decay"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["decay_w1"].astype(dt)).astype(jnp.float32) @ p["decay_w2"].astype(jnp.float32)
+    )
+    logw = -jnp.exp(ww)  # (B,S,D)
+    return r, k, v, g, logw
+
+
+def _wkv_chunked(r, k, v, logw, u, state, chunk: int):
+    """Chunked-parallel WKV. r,k,v: (B,S,H,n) fp32; logw: (B,S,H,n) fp32 (<=0);
+    u: (H,n); state: (B,H,n,n) fp32. Returns (out (B,S,H,n), new_state)."""
+    B, S, H, n = r.shape
+    if S % chunk != 0:
+        chunk = S  # fall back to a single chunk
+    nc = S // chunk
+
+    def reshape_c(x):
+        return x.reshape(B, nc, chunk, H, n).transpose(1, 0, 3, 2, 4)  # (nc,B,H,L,n)
+
+    rc, kc, vc, lwc = map(reshape_c, (r, k, v, logw))
+
+    tri_strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(S0, inp):
+        rr, kk, vv, lw = inp  # (B,H,L,n)
+        la = jnp.cumsum(lw, axis=2)  # inclusive log-decay products
+        la_prev = la - lw  # la_{t-1} (exclusive)
+        # inter-chunk: r~_t = r_t * exp(la_{t-1}) (safe: la_prev <= 0)
+        r_dec = rr * jnp.exp(la_prev)
+        out = jnp.einsum("bhtc,bhcv->bhtv", r_dec, S0)
+        # intra-chunk: pairwise-safe decay tensor exp(la_{t-1} - la_s), s < t
+        ddiff = la_prev[:, :, :, None, :] - la[:, :, None, :, :]  # (B,H,t,s,n)
+        ddiff = jnp.where(tri_strict[None, None, :, :, None], ddiff, -jnp.inf)
+        scores = jnp.einsum("bhtc,bhsc,bhtsc->bhts", rr, kk, jnp.exp(ddiff))
+        out = out + jnp.einsum("bhts,bhsv->bhtv", scores, vv)
+        # diagonal bonus term: (r_t . (u * k_t)) v_t
+        diag = jnp.sum(rr * u[None, :, None, :] * kk, axis=-1)  # (B,H,L)
+        out = out + diag[..., None] * vv
+        # state update: S' = diag(exp(la_L)) S0 + sum_s exp(la_L - la_s) k_s v_s^T
+        la_last = la[:, :, -1:, :]  # (B,H,1,n)
+        k_dec = kk * jnp.exp(la_last - la)  # safe: la_last >= la_s
+        S1 = jnp.exp(la_last.squeeze(2))[..., None] * S0 + jnp.einsum("bhsc,bhsv->bhcv", k_dec, vv)
+        return S1, out
+
+    # remat: the pairwise decay tensor must not be saved for every chunk
+    state, outs = jax.lax.scan(jax.checkpoint(body), state, (rc, kc, vc, lwc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, n)
+    return out, state
+
+
+def time_mix(cfg, p, x, *, prev_x=None, state=None, sh=None):
+    """Full-sequence RWKV6 time mixing.
+
+    Returns (out, (last_x, new_state)) so prefill can hand the recurrent state
+    to the decode loop.
+    """
+    B, S, D = x.shape
+    H, n = cfg.num_heads, cfg.rwkv.head_size
+    x_prev = token_shift(x, prev_x)
+    r, k, v, g, logw = _projections(cfg, p, x, x_prev)
+    rh = r.reshape(B, S, H, n).astype(jnp.float32)
+    kh = k.reshape(B, S, H, n).astype(jnp.float32)
+    vh = v.reshape(B, S, H, n).astype(jnp.float32)
+    lw = logw.reshape(B, S, H, n)
+    if state is None:
+        state = jnp.zeros((B, H, n, n), jnp.float32)
+    u = p["bonus"].astype(jnp.float32)
+    out, new_state = _wkv_chunked(rh, kh, vh, lw, u, state, cfg.rwkv.chunk_size)
+    out = out.reshape(B, S, D).astype(x.dtype)
+    out = group_norm_heads(out, p["ln_x_scale"], p["ln_x_bias"], H, 64e-5)
+    out = out * g
+    out = out @ p["w_o"].astype(x.dtype)
+    return out, (x[:, -1], new_state)
+
+
+def time_mix_step(cfg, p, x, prev_x, state):
+    """Single-token decode step. x: (B,1,D); state: (B,H,n,n) fp32."""
+    B, _, D = x.shape
+    H, n = cfg.num_heads, cfg.rwkv.head_size
+    x_prev = prev_x.reshape(B, 1, D).astype(x.dtype)
+    r, k, v, g, logw = _projections(cfg, p, x, x_prev)
+    rh = r.reshape(B, H, n).astype(jnp.float32)
+    kh = k.reshape(B, H, n).astype(jnp.float32)
+    vh = v.reshape(B, H, n).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(B, H, n))
+    u = p["bonus"].astype(jnp.float32)
+    a = kh[..., :, None] * vh[..., None, :]  # (B,H,n,n) outer product
+    out = jnp.einsum("bhc,bhcv->bhv", rh, state + u[None, :, :, None] * a)
+    new_state = w[..., None] * state + a
+    out = out.reshape(B, 1, D).astype(x.dtype)
+    out = group_norm_heads(out, p["ln_x_scale"], p["ln_x_bias"], H, 64e-5)
+    out = out * g
+    out = out @ p["w_o"].astype(x.dtype)
+    return out, (x[:, -1], new_state)
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+# ---------------------------------------------------------------------------
+
+
+def channel_mix(cfg, p, x, *, prev_x=None, sh=None):
+    dt = x.dtype
+    x_prev = token_shift(x, prev_x)
+    sx = x_prev - x
+    xk = x + sx * p["maa_k"].astype(dt)
+    xr = x + sx * p["maa_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(dt)))
+    if sh is not None:
+        k = sh(k, ("batch", "seq", "mlp"))
+    kv = k @ p["w_v"].astype(dt)
+    return jax.nn.sigmoid(xr @ p["w_r"].astype(dt)) * kv, x[:, -1]

@@ -1,0 +1,166 @@
+"""Selective-SSM head for the Hymba hybrid blocks (TPU-adapted).
+
+Hymba (arXiv:2411.13676) pairs attention heads with Mamba heads.  Mamba-1's
+per-channel dt makes the chunked-parallel form materialize an
+O(chunk^2 * d_inner * N) tensor — ~13 GB per chunk at Hymba width, fine for a
+sequential CUDA scan kernel but hostile to the MXU.  Following Mamba-2/SSD
+(arXiv:2405.21060) we give each SSM *head* a scalar dt (A keeps its (H, N)
+diagonal structure), after which every term factors into matmuls:
+
+    decay:  la_t[h,j] = A[h,j] * cumsum(dt)[t,h]                 (<= 0)
+    intra:  score[t,s,h] = sum_j C_t[j] B_s[j] exp(la_t - la_s)  (s <= t)
+            y2[t,h,p]    = sum_s score[t,s,h] * dt_s[h] * x_s[h,p]
+    inter:  y1[t,h,p]    = sum_j C_t[j] exp(la_t[h,j]) h0[h,p,j]
+    state:  h1[h,p,j]    = exp(la_L) h0 + sum_s exp(la_L - la_s) dt_s B_s[j] x_s[h,p]
+
+All exponents are differences of a monotone cumulative sum, hence <= 0 and
+numerically safe.  This hardware adaptation is recorded in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def head_dim_inner(cfg) -> int:
+    di = d_inner(cfg)
+    assert di % cfg.num_heads == 0, f"ssm: d_inner({di}) % heads({cfg.num_heads}) != 0"
+    return di // cfg.num_heads
+
+
+def ssm_specs(cfg) -> dict:
+    D = cfg.d_model
+    s = cfg.ssm
+    di, N, H = d_inner(cfg), s.state_size, cfg.num_heads
+    return {
+        "in_proj": ParamSpec((D, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.conv_width, di), (None, "ssm_inner")),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), "zeros"),
+        # per-token SSM params: dt per head, B and C per state index
+        "x_proj": ParamSpec((di, 2 * N), ("ssm_inner", None)),
+        "dt_proj": ParamSpec((di, H), ("ssm_inner", "heads"), "normal"),
+        "dt_bias": ParamSpec((H,), ("heads",), "ssm_dt"),
+        "a_log": ParamSpec((H, N), ("heads", None), "ssm_a"),
+        "d_skip": ParamSpec((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamSpec((di, D), ("ssm_inner", "embed")),
+    }
+
+
+def _conv1d(x, w, b, conv_state=None):
+    """Depthwise causal conv. x: (B,S,di), w: (K,di). Returns (y, new_state)."""
+    K = w.shape[0]
+    B, S, di = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B, S+K-1, di)
+    y = sum(xp[:, i : i + S] * w[i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1) :] if K > 1 else jnp.zeros((B, 0, di), x.dtype)
+    return y, new_state
+
+
+def _selective_params(cfg, p, xc):
+    """xc: (B,S,di) post-conv -> dt (B,S,H) fp32, B/C (B,S,N) fp32."""
+    N = cfg.ssm.state_size
+    proj = xc @ p["x_proj"].astype(xc.dtype)  # (B,S,2N)
+    Bm, Cm = jnp.split(proj, 2, axis=-1)
+    dt = jax.nn.softplus(xc @ p["dt_proj"].astype(xc.dtype) + p["dt_bias"].astype(xc.dtype))
+    return dt.astype(jnp.float32), Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _ssd_chunked(A, dt, Bm, Cm, xh, state, chunk):
+    """Chunked scan. A: (H,N); dt: (B,S,H); Bm/Cm: (B,S,N);
+    xh: (B,S,H,P) fp32; state: (B,H,P,N) fp32. Returns (y (B,S,H,P), state)."""
+    B, S, H, P = xh.shape
+    N = A.shape[1]
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+
+    def rc(x):
+        shp = (B, nc, chunk) + x.shape[2:]
+        perm = (1, 0) + tuple(range(2, len(shp)))
+        return x.reshape(shp).transpose(perm)
+
+    dt_c, B_c, C_c, x_c = rc(dt), rc(Bm), rc(Cm), rc(xh)
+    tri_incl = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(h0, xs):
+        dtc, Bb, Cb, xb = xs  # (B,L,H), (B,L,N), (B,L,N), (B,L,H,P)
+        sdt = jnp.cumsum(dtc, axis=1)  # (B,L,H) inclusive
+        la = sdt[..., None] * A[None, None]  # (B,L,H,N) <= 0
+        # inter-chunk: y1 = C_t . exp(la_t) h0
+        y1 = jnp.einsum("blj,blhj,bhpj->blhp", Cb, jnp.exp(la), h0)
+        # intra-chunk pairwise decays (t,s): la_t - la_s <= 0 for s <= t
+        dd = la[:, :, None] - la[:, None, :]  # (B,t,s,H,N)
+        dd = jnp.where(tri_incl[None, :, :, None, None], dd, -jnp.inf)
+        score = jnp.einsum("btj,bsj,btshj->btsh", Cb, Bb, jnp.exp(dd))
+        xin = dtc[..., None] * xb  # (B,L,H,P) dt-scaled inputs
+        y2 = jnp.einsum("btsh,bshp->bthp", score, xin)
+        # state update
+        la_last = la[:, -1:]  # (B,1,H,N)
+        dec_in = jnp.exp(la_last - la)  # (B,L,H,N) safe
+        h1 = jnp.exp(la_last[:, 0])[:, :, None, :] * h0 + jnp.einsum(
+            "blhj,blj,blhp->bhpj", dec_in, Bb, xin
+        )
+        return h1, y1 + y2
+
+    # remat: the (t,s,H,N) pairwise tensor must not be saved per chunk
+    state, ys = jax.lax.scan(jax.checkpoint(body), state, (dt_c, B_c, C_c, x_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, state
+
+
+def ssm_mix(cfg, p, x, *, conv_state=None, ssm_state=None, sh=None):
+    """Full-sequence selective SSM. x: (B,S,D).
+
+    Returns (out, (new_conv_state, new_ssm_state))."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    di, H, P = d_inner(cfg), cfg.num_heads, head_dim_inner(cfg)
+    xz = x @ p["in_proj"].astype(x.dtype)  # (B,S,2di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if sh is not None:
+        xi = sh(xi, ("batch", "seq", "ssm_inner"))
+        z = sh(z, ("batch", "seq", "ssm_inner"))
+    xc, new_conv = _conv1d(xi, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _selective_params(cfg, p, xc)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,N), negative
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, H, P, s.state_size), jnp.float32)
+    xh = xc.astype(jnp.float32).reshape(B, S, H, P)
+    y, new_state = _ssd_chunked(A, dt, Bm, Cm, xh, ssm_state, s.chunk_size)
+    y = y.reshape(B, S, di).astype(x.dtype) + xc * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, (new_conv, new_state)
+
+
+def ssm_step(cfg, p, x, conv_state, ssm_state):
+    """One-token decode. x: (B,1,D); conv_state: (B,K-1,di);
+    ssm_state: (B,H,P,N) fp32."""
+    B = x.shape[0]
+    di, H, P = d_inner(cfg), cfg.num_heads, head_dim_inner(cfg)
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _conv1d(xi, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = _selective_params(cfg, p, xc)  # (B,1,H), (B,1,N)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt[:, 0, :, None] * A[None])  # (B,H,N)
+    xh = xc.astype(jnp.float32).reshape(B, H, P)
+    u = jnp.einsum("bh,bj,bhp->bhpj", dt[:, 0], Bm[:, 0], xh)
+    new_state = dec[:, :, None, :] * ssm_state + u
+    y = jnp.einsum("bhpj,bj->bhp", new_state, Cm[:, 0]).reshape(B, 1, di)
+    y = y.astype(x.dtype) + xc * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, (new_conv, new_state)

@@ -1,0 +1,98 @@
+"""AdamW with a configurable moment dtype and global-norm clipping.
+
+No optax in this environment, so the optimizer is explicit.  Moments inherit
+the parameter sharding (same tree structure -> same PartitionSpecs), which is
+what makes optimizer state ZeRO-sharded under FSDP for free.  The
+``optimizer_dtype`` knob (fp32 default, bf16 for arctic-480b) is the
+"fits-on-one-pod" lever documented in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    m: Any  # tree like params
+    v: Any  # tree like params
+
+
+def adamw_init(params, *, dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr: jax.Array | float,
+    beta1: float = 0.9,
+    beta2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 0.0,
+    layer_scan: bool = False,
+):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    ``layer_scan``: apply the update one leading-dim (layer) slice at a time
+    for stacked >=3-D leaves.  The Adam math upcasts to fp32; on a 480 B-param
+    MoE the fp32 intermediates of a whole stacked expert tensor are ~2.4 GB
+    per temp PER TENSOR — scanning bounds them to one layer's slice.
+    """
+    step = state.step + 1
+    metrics = {}
+    if grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        metrics["grad_norm"] = gnorm
+    b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd_math(p, g, m, v, wd):
+        gf = g.astype(jnp.float32)
+        mf = beta1 * m.astype(jnp.float32) + (1 - beta1) * gf
+        vf = beta2 * v.astype(jnp.float32) + (1 - beta2) * gf * gf
+        mhat = mf / b1c
+        vhat = vf / b2c
+        pf = p.astype(jnp.float32)
+        new_p = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * pf)
+        return new_p.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    def upd(p, g, m, v):
+        # decoupled weight decay on matrices only (ndim >= 2, excluding the
+        # stacked-layer dim convention keeps norms/scales decay-free)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        if layer_scan and p.ndim >= 3 and p.shape[0] > 1:
+            def body(_, sl):
+                return None, upd_math(*sl, wd)
+
+            _, (np_, nm, nv) = jax.lax.scan(body, None, (p, g, m, v))
+            return np_, nm, nv
+        return upd_math(p, g, m, v, wd)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), metrics

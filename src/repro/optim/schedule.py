@@ -1,0 +1,24 @@
+"""Learning-rate schedules (warmup + cosine / linear / constant)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str = "cosine", *, base_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        if kind == "constant":
+            decay = 1.0
+        elif kind == "linear":
+            frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+            decay = 1.0 - (1.0 - min_ratio) * frac
+        elif kind == "cosine":
+            frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+            decay = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        else:
+            raise ValueError(f"unknown schedule {kind!r}")
+        return base_lr * warm * decay
+
+    return schedule

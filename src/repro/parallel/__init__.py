@@ -1,0 +1,16 @@
+from repro.parallel.sharding import ShardingRules, make_rules
+from repro.parallel.collectives import (
+    CollectiveModel,
+    compress_gradients,
+    compression_ratio,
+    init_compression_state,
+)
+
+__all__ = [
+    "ShardingRules",
+    "make_rules",
+    "CollectiveModel",
+    "compress_gradients",
+    "compression_ratio",
+    "init_compression_state",
+]

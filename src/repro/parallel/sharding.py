@@ -1,0 +1,195 @@
+"""Logical-axis sharding rule engine (MaxText-style, but dependency-free).
+
+Every parameter / activation / cache tensor carries a tuple of *logical* axis
+names (assigned in the model code).  This module maps logical axes onto mesh
+axes with a **greedy, divisibility-checked** assignment:
+
+* each logical axis has an ordered candidate list of mesh axes (or axis
+  tuples, e.g. the combined FSDP axes ``("pod", "data")``);
+* per tensor, candidates are claimed first-come-first-served so no mesh axis
+  is used twice on one tensor;
+* a candidate is skipped when the dim size is not divisible by the mesh-axis
+  size — this is what makes one rule table serve all ten architectures
+  (arctic's 56 heads or hymba's 25 heads simply fall back to replicated while
+  their FFN/expert dims still shard).
+
+Rule tables differ between *parameters* (FSDP over the data axes + TP/EP over
+"model") and *activations* (batch over data axes, heads/mlp/experts over
+"model", optional sequence parallelism).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig, ParallelConfig
+
+Candidate = tuple[str, ...]  # one candidate = tuple of mesh axes used together
+
+
+def _axis_size(mesh: Mesh, cand: Candidate) -> int:
+    n = 1
+    for a in cand:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh_cfg: MeshConfig
+    parallel: ParallelConfig
+
+    # ------------------------------------------------------------------
+    def _data_axes(self) -> Candidate:
+        return tuple(self.mesh_cfg.data_axes)
+
+    def param_rules(self) -> dict[str, tuple[Candidate, ...]]:
+        fsdp: tuple[Candidate, ...] = ((self._data_axes(),) if self.parallel.fsdp else ())
+        tp: tuple[Candidate, ...] = ((("model",),) if self.parallel.tensor_parallel else ())
+        # dict order = priority: the expert dim (EP) claims "model" first
+        # (experts-over-data was tried and REFUTED: the dense GShard dispatch
+        # einsum then reduces a dense (E,C,D) tensor over the data axis —
+        # qwen3 train collective term went 109 s -> 209 s; see §Perf), then
+        # attention heads / FFN hidden (TP); "embed" takes the FSDP axes.
+        return {
+            "expert": tp,
+            "vocab": tp,  # vocab tables: model-axis only (see initializers)
+            "heads": tp,
+            "kv_heads": tp,
+            "mlp": tp,
+            # expert FFN hidden: "model" is usually taken by the expert dim.
+            # In DECODE (fsdp off) fall back to the data axes so expert
+            # weights are fully sharded AND stationary; in training the same
+            # fallback was REFUTED (dense-dispatch grads reduce over data:
+            # qwen3 train collective 109 s -> 223 s, §Perf).
+            "expert_mlp": tp + (() if self.parallel.fsdp else (self._data_axes(),)),
+            "heads_x_dim": tp,
+            "ssm_inner": tp,
+            "embed": fsdp + tp,  # FSDP primary; TP fallback (odd vocab sizes)
+            "embed_v": (),  # embed dim of vocab tables: never sharded
+            "expert_router": tp,
+            # head_dim: TP fallback for indivisible head counts (arctic's 56
+            # heads, hymba's 25) — contraction over head_dim psums cheaply.
+            "head_dim": tp,
+            "layers": (),
+            "layers_inner": (),
+        }
+
+    def act_rules(self) -> dict[str, tuple[Candidate, ...]]:
+        batch: tuple[Candidate, ...] = (self._data_axes(),)
+        tp: tuple[Candidate, ...] = ((("model",),) if self.parallel.tensor_parallel else ())
+        seq: tuple[Candidate, ...] = ((("model",),) if self.parallel.sequence_parallel else ())
+        # dict order = priority: TP-style dims (heads/mlp/experts/vocab) claim
+        # the model axis before the sequence-parallel fallback, so attention
+        # internals shard heads while the residual stream shards seq.
+        return {
+            "batch": batch,
+            "kv_batch": batch,
+            "heads": tp,
+            "kv_heads": tp,
+            "mlp": tp,
+            "expert_mlp": tp,
+            "expert": tp,
+            "vocab": tp,
+            "ssm_inner": tp,
+            "heads_x_dim": tp,
+            "seq": seq,
+            "kv_seq": (),  # claimed via fallback in cache specs (see below)
+            "embed": (),
+            "layers": (),
+            "layers_inner": (),
+        }
+
+    def cache_rules(self) -> dict[str, tuple[Candidate, ...]]:
+        """KV-cache specific: prefer head sharding, fall back to sequence
+        (flash-decoding style split-KV) when head count doesn't divide.
+        Priority is the dict order: kv_seq is appended LAST so kv_heads
+        claims the model axis first."""
+        rules = dict(self.act_rules())
+        rules.pop("kv_seq", None)
+        rules["kv_seq"] = (("model",),)
+        return rules
+
+    # ------------------------------------------------------------------
+    def spec_for(
+        self, axes: tuple[str | None, ...], dims: tuple[int, ...], mesh: Mesh, rules: dict
+    ) -> P:
+        """Greedy one-tensor assignment honoring divisibility.
+
+        Priority = position of the logical axis in the rule table (dict
+        order), so e.g. "kv_heads" (preferred) claims "model" before the
+        "kv_seq" flash-decoding fallback.
+        """
+        used: set[str] = set()
+        assign: list[tuple[str, ...] | None] = [None] * len(axes)
+        rule_order = {name: i for i, name in enumerate(rules)}
+        order = sorted(
+            range(len(axes)),
+            key=lambda i: (
+                len(rules.get(axes[i], ())) == 0,
+                rule_order.get(axes[i], len(rule_order)),
+            ),
+        )
+        # simple two-round greedy: round 1 tries first candidates, round 2 rest
+        for i in order:
+            ax = axes[i]
+            if ax is None:
+                continue
+            for cand in rules.get(ax, ()):
+                if any(a in used for a in cand):
+                    continue
+                if dims[i] % _axis_size(mesh, cand) != 0:
+                    continue
+                assign[i] = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        return P(*assign)
+
+    # ------------------------------------------------------------------
+    def tree_specs(self, axes_tree, shape_tree, mesh: Mesh, rules: dict):
+        """PartitionSpec tree for (logical-axes tree, shape-carrying tree)."""
+
+        def one(axes, leaf):
+            dims = tuple(leaf.shape)
+            assert len(axes) == len(dims), f"axes {axes} vs shape {dims}"
+            return self.spec_for(axes, dims, mesh, rules)
+
+        is_axes = lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+        return jax.tree.map(one, axes_tree, shape_tree, is_leaf=is_axes)
+
+    def param_shardings(self, model_cfg, mesh: Mesh, abstract):
+        from repro.models import param_logical_axes
+
+        axes = param_logical_axes(model_cfg)
+        specs = self.tree_specs(axes, abstract, mesh, self.param_rules())
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P))
+
+    def cache_shardings(self, model_cfg, mesh: Mesh, abstract_cache_tree):
+        from repro.models import stacked_cache_axes
+
+        axes = stacked_cache_axes(model_cfg)
+        specs = self.tree_specs(axes, abstract_cache_tree, mesh, self.cache_rules())
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P))
+
+    def batch_sharding(self, mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, P(self._data_axes()))
+
+    # ------------------------------------------------------------------
+    def make_sharder(self, mesh: Mesh):
+        """``sh(x, logical_axes)`` -> with_sharding_constraint inside jit."""
+        rules = self.act_rules()
+
+        def sh(x, axes):
+            spec = self.spec_for(tuple(axes), tuple(x.shape), mesh, rules)
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+        return sh
+
+
+def make_rules(mesh_cfg: MeshConfig, parallel: ParallelConfig | None = None) -> ShardingRules:
+    return ShardingRules(mesh_cfg, parallel or ParallelConfig())

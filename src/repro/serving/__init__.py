@@ -1,0 +1,19 @@
+from repro.serving.engine import InferenceEngine, Request, RequestState
+from repro.serving.kvcache import (
+    clear_slot,
+    decode_cache_from_prefill,
+    make_engine_cache,
+    write_request_into_slot,
+)
+from repro.serving.sampler import sample_token
+
+__all__ = [
+    "InferenceEngine",
+    "Request",
+    "RequestState",
+    "clear_slot",
+    "decode_cache_from_prefill",
+    "make_engine_cache",
+    "write_request_into_slot",
+    "sample_token",
+]

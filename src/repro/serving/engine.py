@@ -1,0 +1,181 @@
+"""Continuous-batching inference engine.
+
+The paper's inference QoS class served as a real engine: a fixed-size decode
+batch whose slots are continuously refilled as requests finish (Orca-style
+iteration-level scheduling).  Admission runs a (batch=1) prefill and grafts
+the resulting cache into a free slot; every ``step()`` advances ALL active
+slots one token through the jitted ``decode_step``.
+
+Online vs offline QoS (paper §IV.F): online requests preempt the admission
+queue; offline requests backfill free slots.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, prefill
+from repro.serving.kvcache import (
+    clear_slot,
+    decode_cache_from_prefill,
+    make_engine_cache,
+    write_request_into_slot,
+)
+from repro.serving.sampler import sample_token
+
+
+class RequestState(Enum):
+    WAITING = "waiting"
+    ACTIVE = "active"
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    online: bool = True  # online requests admit before offline ones
+    temperature: float = 0.0
+    state: RequestState = RequestState.WAITING
+    generated: list[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    submit_t: float = field(default_factory=time.monotonic)
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.first_token_t is None else self.first_token_t - self.submit_t
+
+
+class InferenceEngine:
+    def __init__(self, cfg, params, *, max_batch: int = 4, max_seq: int = 512, eos_token: int = 1, seed: int = 0):
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only; no decode serving")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos = eos_token
+        self.cache = make_engine_cache(cfg, max_batch, max_seq, jnp.float32)
+        self.pos = np.full((max_batch,), 0, np.int32)  # next position per slot
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+        self._ids = itertools.count()
+        self._key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q))
+        self._prefill = jax.jit(lambda p, b: prefill(cfg, p, b))
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: list[int], *, max_new_tokens: int = 32, online: bool = True, temperature: float = 0.0) -> Request:
+        req = Request(
+            req_id=next(self._ids),
+            prompt=list(prompt),
+            max_new_tokens=max_new_tokens,
+            online=online,
+            temperature=temperature,
+        )
+        self.queue.append(req)
+        return req
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        """Prefill waiting requests into free slots (online first)."""
+        free = self._free_slots()
+        if not free:
+            return
+        self.queue.sort(key=lambda r: (not r.online, r.submit_t))
+        while free and self.queue:
+            req = self.queue.pop(0)
+            slot = free.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            batch = {"tokens": prompt}
+            if self.cfg.family == "vlm":
+                batch["vision_tokens"] = jnp.zeros(
+                    (1, self.cfg.vision.num_image_tokens, self.cfg.d_model), jnp.float32
+                )
+            logits, raw = self._prefill(self.params, batch)
+            req_cache = decode_cache_from_prefill(
+                self.cfg, raw, seq_filled=len(req.prompt), decode_len=self.max_seq
+            )
+            self.cache = write_request_into_slot(self.cfg, self.cache, req_cache, slot)
+            self.pos[slot] = len(req.prompt)
+            # first generated token comes from the prefill logits
+            self._key, sub = jax.random.split(self._key)
+            tok = int(sample_token(logits[0], req.temperature, sub))
+            req.generated.append(tok)
+            req.first_token_t = time.monotonic()
+            req.state = RequestState.ACTIVE
+            req.slot = slot
+            self.slots[slot] = req
+            self.tokens_out += 1
+            self._finish_if_done(req)
+
+    def _finish_if_done(self, req: Request) -> None:
+        if req.state != RequestState.ACTIVE:
+            return
+        if len(req.generated) >= req.max_new_tokens or (req.generated and req.generated[-1] == self.eos):
+            req.state = RequestState.DONE
+            req.done_t = time.monotonic()
+            slot = req.slot
+            self.slots[slot] = None
+            self.cache = clear_slot(self.cfg, self.cache, slot)
+            self.pos[slot] = 0
+            self.done.append(req)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit, then advance all active slots."""
+        self._admit()
+        active = [r for r in self.slots if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for r in active:
+            tokens[r.slot, 0] = r.generated[-1]
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tokens), pos)
+        self.steps += 1
+        produced = 0
+        for r in active:
+            self._key, sub = jax.random.split(self._key)
+            tok = int(sample_token(logits[r.slot], r.temperature, sub))
+            r.generated.append(tok)
+            self.pos[r.slot] += 1
+            produced += 1
+            self.tokens_out += 1
+            self._finish_if_done(r)
+        return produced
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self.step()
+        return self.done
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        ttfts = [r.ttft for r in self.done if r.ttft is not None]
+        return {
+            "requests_done": len(self.done),
+            "decode_steps": self.steps,
+            "tokens_out": self.tokens_out,
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
+            "slot_utilization": 1.0 - len(self._free_slots()) / self.max_batch,
+        }

@@ -1,0 +1,136 @@
+"""KV-cache management: prefill -> ring-buffered decode cache, slot surgery.
+
+``decode_cache_from_prefill`` converts the full-length K/V returned by
+``models.prefill`` into the fixed-size ring-buffer cache the decode step
+consumes (sliding-window archs keep only the last W tokens; the ring-slot
+invariant is slot = pos % W).
+
+``write_request_into_slot`` grafts a single request's cache into one batch
+slot of the engine's persistent cache — the core mutation of continuous
+batching.  Batch-dim discovery is driven by the cache's logical axes
+("kv_batch"), so the same code serves dense KV caches, RWKV states, hybrid
+conv/SSM states and VLM grouped caches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import (
+    cache_window,
+    init_cache,
+    stacked_cache_axes,
+)
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def _ring_kv(full: jax.Array, seq_filled: int, W: int):
+    """full: (L, B, S, KV, hd) -> ring (L, B, W, KV, hd) + pos (B, W)."""
+    L, B, S = full.shape[:3]
+    start = max(seq_filled - W, 0)
+    idx = jnp.arange(start, start + min(W, seq_filled))
+    slots = idx % W
+    ring = jnp.zeros((L, B, W) + full.shape[3:], full.dtype)
+    ring = ring.at[:, :, slots].set(full[:, :, idx])
+    pos = jnp.full((B, W), -1, jnp.int32)
+    pos = pos.at[:, slots].set(idx.astype(jnp.int32))
+    return ring, pos
+
+
+def decode_cache_from_prefill(cfg, raw_cache, *, seq_filled: int, decode_len: int):
+    """Build the decode cache from prefill output.
+
+    decode_len: total positions the decode cache must address (>= seq_filled +
+    new tokens for full-attention archs; ignored by constant-state families).
+    """
+    fam = cfg.family
+    W = cache_window(cfg, decode_len)
+    if fam in ("dense", "moe"):
+        k, pos = _ring_kv(raw_cache["k"], seq_filled, W)
+        v, _ = _ring_kv(raw_cache["v"], seq_filled, W)
+        return {"k": k, "v": v, "pos": _layer_pos(pos, k.shape[0])}
+    if fam == "ssm":
+        return dict(raw_cache)  # states pass through (O(1) decode)
+    if fam == "hybrid":
+        k, pos = _ring_kv(raw_cache["k"], seq_filled, W)
+        v, _ = _ring_kv(raw_cache["v"], seq_filled, W)
+        return {
+            "k": k,
+            "v": v,
+            "pos": _layer_pos(pos, k.shape[0]),
+            "conv": raw_cache["conv"],
+            "ssm": raw_cache["ssm"],
+        }
+    if fam == "vlm":
+        sk = raw_cache["self"]["k"]  # (G, g, B, S, KV, hd)
+        G, g = sk.shape[:2]
+        flat_k = sk.reshape((G * g,) + sk.shape[2:])
+        flat_v = raw_cache["self"]["v"].reshape((G * g,) + sk.shape[2:])
+        rk, pos = _ring_kv(flat_k, seq_filled, W)
+        rv, _ = _ring_kv(flat_v, seq_filled, W)
+        return {
+            "self": {
+                "k": rk.reshape((G, g) + rk.shape[1:]),
+                "v": rv.reshape((G, g) + rv.shape[1:]),
+                "pos": jnp.broadcast_to(pos, (G, g) + pos.shape),
+            },
+            "cross": raw_cache["cross"],
+        }
+    raise ValueError(fam)
+
+
+def _layer_pos(pos: jax.Array, L: int) -> jax.Array:
+    """Broadcast the (B, W) position buffer across the L stacked layers."""
+    return jnp.broadcast_to(pos[None], (L,) + pos.shape)
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching slot surgery
+# ---------------------------------------------------------------------------
+
+
+def batch_dim_of(axes: tuple) -> int | None:
+    for i, a in enumerate(axes):
+        if a == "kv_batch":
+            return i
+    return None
+
+
+def write_request_into_slot(cfg, engine_cache, request_cache, slot: int):
+    """Graft a (batch=1) request cache into batch slot ``slot``."""
+    axes = stacked_cache_axes(cfg)
+
+    def graft(ax, full, one):
+        b = batch_dim_of(ax)
+        if b is None:
+            return full
+        idx = [slice(None)] * full.ndim
+        idx[b] = slot
+        return full.at[tuple(idx)].set(jnp.take(one, 0, axis=b).astype(full.dtype))
+
+    return jax.tree.map(graft, axes, engine_cache, request_cache, is_leaf=_is_axes)
+
+
+def clear_slot(cfg, engine_cache, slot: int):
+    """Reset one batch slot (freed request): zeros, pos -> -1."""
+    axes = stacked_cache_axes(cfg)
+
+    def wipe(path_ax, leaf):
+        ax = path_ax
+        b = batch_dim_of(ax)
+        if b is None:
+            return leaf
+        idx = [slice(None)] * leaf.ndim
+        idx[b] = slot
+        fill = -1 if ax[-1] == "kv_seq" and leaf.dtype == jnp.int32 else 0
+        return leaf.at[tuple(idx)].set(jnp.full(leaf[tuple(idx)].shape, fill, leaf.dtype))
+
+    return jax.tree.map(wipe, axes, engine_cache, is_leaf=_is_axes)
+
+
+def make_engine_cache(cfg, max_batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return init_cache(cfg, max_batch, max_seq, dtype)

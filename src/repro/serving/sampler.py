@@ -1,0 +1,17 @@
+"""Token sampling: greedy / temperature / top-k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(logits: jax.Array, temperature: float, key: jax.Array, *, top_k: int = 0) -> jax.Array:
+    """logits: (V,) -> scalar int32 token."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        logits = jnp.where(logits < vals[-1], -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)

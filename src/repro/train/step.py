@@ -1,0 +1,194 @@
+"""Train-step factory: mixed precision, remat, microbatched grad accumulation.
+
+``make_train_step(model_cfg, run_cfg, rules, mesh)`` returns a pure
+``step(state, batch) -> (state, metrics)`` ready for ``jax.jit`` with the
+sharding trees from ``state_shardings``.
+
+Mixed precision follows the standard recipe: master params in
+``precision.param_dtype`` (fp32), cast once to ``compute_dtype`` (bf16) at
+step entry — under FSDP the all-gather then moves bf16, halving wire bytes —
+softmax/norm statistics in fp32, logits in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.optim import AdamWState, adamw_init, adamw_update, make_schedule
+from repro.parallel import compress_gradients, init_compression_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    compress_residual: Any  # None unless grad_compression enabled
+
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if x.dtype != dtype else x, tree)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, *, z_loss: float = 0.0):
+    """Mean CE over all positions (logits fp32), with optional z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss > 0:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def loss_fn(
+    model_cfg,
+    params,
+    batch,
+    *,
+    sh=None,
+    q_chunk=0,
+    remat="none",
+    z_loss=0.0,
+    attn_impl="xla",
+    compute_dtype=None,
+):
+    logits, aux = forward(
+        model_cfg,
+        params,
+        batch,
+        sh=sh,
+        q_chunk=q_chunk,
+        remat=remat,
+        attn_impl=attn_impl,
+        compute_dtype=compute_dtype,
+    )
+    ce = cross_entropy(logits, batch["labels"], z_loss=z_loss)
+    return ce + aux, (ce, aux)
+
+
+def init_train_state(model_cfg, run_cfg, key) -> TrainState:
+    from repro.models import init_params
+
+    prec = run_cfg.precision
+    params = init_params(model_cfg, key, DTYPES[prec.param_dtype])
+    opt = adamw_init(params, dtype=DTYPES[prec.optimizer_dtype])
+    residual = init_compression_state(params, run_cfg.parallel.grad_compression)
+    return TrainState(params=params, opt=opt, compress_residual=residual)
+
+
+def abstract_train_state(model_cfg, run_cfg) -> TrainState:
+    """ShapeDtypeStruct twin of init_train_state for the dry-run."""
+    from repro.models import abstract_params
+
+    prec = run_cfg.precision
+    params = abstract_params(model_cfg, DTYPES[prec.param_dtype])
+    odt = DTYPES[prec.optimizer_dtype]
+    mk = lambda p: jax.ShapeDtypeStruct(p.shape, odt)
+    opt = AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), m=jax.tree.map(mk, params), v=jax.tree.map(mk, params))
+    residual = None
+    if run_cfg.parallel.grad_compression != "none":
+        residual = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=opt, compress_residual=residual)
+
+
+def state_shardings(model_cfg, run_cfg, rules, mesh, abstract_state: TrainState):
+    """NamedSharding tree matching TrainState (moments inherit param specs)."""
+    p_sh = rules.param_shardings(model_cfg, mesh, abstract_state.params)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    step_sh = NamedSharding(mesh, P())
+    opt_sh = AdamWState(step=step_sh, m=p_sh, v=p_sh)
+    res_sh = None if abstract_state.compress_residual is None else p_sh
+    return TrainState(params=p_sh, opt=opt_sh, compress_residual=res_sh)
+
+
+def make_train_step(model_cfg, run_cfg, rules=None, mesh=None, *, q_chunk=0, param_shardings=None):
+    """Build step(state, batch) -> (state, metrics).
+
+    ``param_shardings`` (NamedSharding tree matching params) pins the bf16
+    compute-cast of the master weights to the FSDP sharding — the explicit
+    ZeRO-3 boundary.  XLA then all-gathers each layer's weights *inside* the
+    layer scan (on demand) and reduce-scatters its gradients per iteration,
+    instead of materializing the whole stacked weight/grad tree per device
+    (measured: 22 GB/device of unsharded fp32 grads on llama-90b without
+    this).  Gradients arrive in compute dtype (bf16); Adam upcasts.
+    """
+    prec, par, tr = run_cfg.precision, run_cfg.parallel, run_cfg.train
+    compute_dtype = DTYPES[prec.compute_dtype]
+    sh = rules.make_sharder(mesh) if (rules is not None and mesh is not None) else None
+    schedule = make_schedule(
+        "cosine", base_lr=tr.learning_rate, warmup_steps=tr.warmup_steps, total_steps=tr.total_steps
+    )
+
+    def batch_loss(params, batch):
+        # NOTE: no whole-tree pre-cast — each weight use casts its own layer
+        # slice inside the scan body (see forward's compute_dtype docstring),
+        # so stacked params AND their grads stay FSDP-sharded through the
+        # loop.  A hoisted bf16 tree costs ~33 GB/device on llama-90b.
+        return loss_fn(
+            model_cfg,
+            params,
+            batch,
+            sh=sh,
+            q_chunk=q_chunk,
+            remat=par.remat,
+            z_loss=tr.z_loss,
+            compute_dtype=compute_dtype,
+        )
+
+    grad_fn = jax.value_and_grad(batch_loss, has_aux=True)
+
+    def step(state: TrainState, batch):
+        nmb = par.num_microbatches
+        if nmb > 1:
+
+            def micro(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (l, (ce, aux)), g = grad_fn(state.params, mb)
+                # keep the fp32 accumulator on the FSDP sharding
+                if param_shardings is not None:
+                    g = jax.tree.map(
+                        lambda x, s: jax.lax.with_sharding_constraint(x, s), g, param_shardings
+                    )
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + ce, a_acc + aux), None
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]), batch
+            )
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, ce, aux), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), mb_batch
+            )
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            ce, aux = ce / nmb, aux / nmb
+        else:
+            (_, (ce, aux)), grads = grad_fn(state.params, batch)
+
+        residual = state.compress_residual
+        if par.grad_compression != "none":
+            grads, residual = compress_gradients(grads, residual, par.grad_compression)
+
+        lr = schedule(state.opt.step)
+        new_params, new_opt, om = adamw_update(
+            state.params,
+            grads,
+            state.opt,
+            lr=lr,
+            beta1=tr.beta1,
+            beta2=tr.beta2,
+            eps=tr.eps,
+            weight_decay=tr.weight_decay,
+            grad_clip=tr.grad_clip,
+            layer_scan=par.optimizer_layer_scan,
+        )
+        metrics = {"loss": ce, "aux_loss": aux, "lr": lr, **om}
+        return TrainState(params=new_params, opt=new_opt, compress_residual=residual), metrics
+
+    return step

@@ -1,0 +1,17 @@
+from repro.utils.pytree import (
+    tree_paths,
+    tree_map_with_path,
+    flatten_with_paths,
+    tree_size_bytes,
+    tree_param_count,
+)
+from repro.utils.registry import Registry
+
+__all__ = [
+    "tree_paths",
+    "tree_map_with_path",
+    "flatten_with_paths",
+    "tree_size_bytes",
+    "tree_param_count",
+    "Registry",
+]

@@ -1,0 +1,73 @@
+"""Path-aware pytree utilities.
+
+The whole framework represents parameters, optimizer state and caches as plain
+nested dicts.  These helpers give every leaf a stable ``"a/b/c"`` path string,
+which the sharding rule engine (``repro.parallel.sharding``) and the checkpoint
+layer key off.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _key_str(k) -> str:
+    """Render one jax tree key entry as a plain string."""
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    if isinstance(k, jax.tree_util.FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def path_str(path) -> str:
+    return "/".join(_key_str(k) for k in path)
+
+
+def tree_paths(tree: Any) -> list[str]:
+    """All leaf paths of ``tree`` in flatten order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [path_str(p) for p, _ in leaves]
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any, *rest: Any) -> Any:
+    """``jax.tree.map`` where ``fn`` receives the ``"a/b/c"`` leaf path first."""
+
+    def wrapper(path, leaf, *others):
+        return fn(path_str(path), leaf, *others)
+
+    return jax.tree_util.tree_map_with_path(wrapper, tree, *rest)
+
+
+def flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(path_str(p), v) for p, v in leaves]
+
+
+def _leaf_nbytes(x: Any) -> int:
+    shape = getattr(x, "shape", None)
+    dtype = getattr(x, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes of all array-like leaves (works on ShapeDtypeStructs too)."""
+    return sum(_leaf_nbytes(x) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_param_count(tree: Any) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        shape = getattr(x, "shape", None)
+        if shape is not None:
+            total += int(np.prod(shape, dtype=np.int64))
+    return total

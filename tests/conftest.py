@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests import the library from src/ (works with or without PYTHONPATH=src)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

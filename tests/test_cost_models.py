@@ -1,0 +1,85 @@
+"""Unit tests for the dry-run analysis machinery: the jaxpr cost model and
+the trip-count-aware HLO collective parser (the roofline's data sources)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import collective_stats, shape_bytes
+from repro.launch.jaxpr_cost import estimate_cost
+from repro.parallel.collectives import CollectiveModel
+
+
+def test_jaxpr_cost_exact_matmul():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    est = estimate_cost(lambda x, y: x @ y, a, b)
+    assert est["flops"] == 2 * 128 * 256 * 64
+    # bytes: both operands + output
+    assert est["hbm_bytes"] == (128 * 256 + 256 * 64 + 128 * 64) * 4
+
+
+def test_jaxpr_cost_scales_scan_by_trip_count():
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def scanned(w, x):
+        def body(c, _):
+            return c @ w, None
+
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    est = estimate_cost(scanned, w, x)
+    assert est["flops"] >= 10 * 2 * 64**3  # ONE body x 10 (XLA reports x1)
+
+
+def test_jaxpr_cost_counts_remat_recompute():
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def loss(w):
+        f = jax.checkpoint(lambda w: jnp.sum(jnp.tanh(w @ w) @ w))
+        return f(w)
+
+    base = estimate_cost(lambda w: jnp.sum(jnp.tanh(w @ w) @ w), w)
+    grad = estimate_cost(jax.grad(loss), w)
+    # grad-with-remat must cost more than 2x forward (fwd + recompute + bwd)
+    assert grad["flops"] > 2.5 * base["flops"]
+
+
+def test_shape_bytes_parser():
+    assert shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert shape_bytes("bf16[2,2]{1,0}") == 8
+    assert shape_bytes("(f32[4], s32[2])") == 24
+    assert shape_bytes("pred[]") == 1  # scalar
+
+
+def test_collective_parser_scales_by_while_trip():
+    hlo = """
+HloModule test
+
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar = f32[64]{0} all-reduce(%gte), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+
+%cond.1 (p: (s32[], f32[64])) -> pred[] {
+  %c = s32[] constant(16)
+  %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %w = (s32[], f32[64]) while(%init), condition=%cond.1, body=%body.1
+  %ar2 = f32[128]{0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+}
+"""
+    st = collective_stats(hlo)
+    # 16 iterations x 256B + 1 x 512B
+    assert st.operand_bytes["all-reduce"] == 16 * 256 + 512
+    assert st.count["all-reduce"] == 17
+
+
+def test_collective_ring_model():
+    m = CollectiveModel()
+    assert m.all_reduce(100.0, 4) == pytest.approx(150.0)  # 2(n-1)/n
+    assert m.all_gather(100.0, 4) == pytest.approx(75.0)
+    assert m.all_to_all(100.0, 2) == pytest.approx(50.0)

@@ -1,0 +1,98 @@
+"""Optimizer, schedules, gradient compression, data pipeline properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.model import reduce_for_smoke
+from repro.configs import get_config
+from repro.data import make_batch_fn, pack_sequences
+from repro.data.packing import packing_efficiency
+from repro.optim import adamw_init, adamw_update, make_schedule
+from repro.optim.adamw import clip_by_global_norm, global_norm
+from repro.parallel import compress_gradients, init_compression_state
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}  # d/dw (w^2)
+        params, state, _ = adamw_update(params, grads, state, lr=0.05, weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_layer_scan_equivalent():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (4, 8, 8))}
+    grads = {"w": jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 8))}
+    s0 = adamw_init(params)
+    p1, s1, _ = adamw_update(params, grads, s0, lr=1e-2, layer_scan=False)
+    p2, s2, _ = adamw_update(params, grads, s0, lr=1e-2, layer_scan=True)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1.m["w"]), np.asarray(s2.m["w"]), rtol=1e-6)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_schedule_warmup_cosine():
+    sched = make_schedule("cosine", base_lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(sched(0)) == 0.0
+    assert abs(float(sched(10)) - 1e-3) < 1e-9
+    assert float(sched(100)) < float(sched(50)) < float(sched(10))
+
+
+@pytest.mark.parametrize("method", ["bf16", "int8"])
+def test_compression_error_feedback_unbiased(method):
+    """With error feedback, the SUM of compressed grads tracks the true sum."""
+    key = jax.random.PRNGKey(0)
+    true = {"w": jax.random.normal(key, (256,))}
+    residual = init_compression_state(true, method)
+    total_c = jnp.zeros((256,))
+    for i in range(20):
+        g, residual = compress_gradients(true, residual, method)
+        total_c = total_c + g["w"]
+    rel = float(jnp.linalg.norm(total_c - 20 * true["w"]) / jnp.linalg.norm(20 * true["w"]))
+    assert rel < 0.05, f"{method}: error feedback drifted {rel:.3f}"
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_batches_deterministic():
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    fn = make_batch_fn(cfg, global_batch=4, seq_len=16, seed=7)
+    a, b = fn(3), fn(3)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = fn(4)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.integers(1, 60), min_size=1, max_size=20),
+    st.sampled_from([64, 128]),
+)
+def test_packing_conserves_tokens(doc_lens, seq_len):
+    docs = [np.arange(1, n + 1, dtype=np.int32) for n in doc_lens]
+    tokens, positions, segments = pack_sequences(docs, seq_len)
+    # property 1: every document token appears exactly once
+    assert int((segments > 0).sum()) == sum(min(n, seq_len) for n in doc_lens)
+    # property 2: positions reset at each document start
+    for row in range(tokens.shape[0]):
+        segs = segments[row]
+        pos = positions[row]
+        for j in range(seq_len):
+            if segs[j] > 0 and (j == 0 or segs[j] != segs[j - 1]):
+                assert pos[j] == 0  # new doc -> position resets
+    # property 3: efficiency in (0, 1]
+    assert 0 < packing_efficiency(segments) <= 1.0

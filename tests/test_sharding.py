@@ -1,0 +1,142 @@
+"""Sharding rule engine: divisibility fallbacks, axis-conflict resolution.
+
+Uses a stub mesh (only ``.shape`` is consulted by ``spec_for``), so the
+production 16x16 geometry is tested without 256 devices.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig, ParallelConfig
+from repro.configs import get_config
+from repro.models import abstract_params, param_logical_axes
+from repro.parallel import make_rules
+
+
+@dataclass
+class StubMesh:
+    shape: dict
+
+
+MESH = StubMesh({"data": 16, "model": 16})
+MESH_MULTI = StubMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def rules(multi=False, **kw):
+    return make_rules(MeshConfig(multi_pod=multi), ParallelConfig(**kw))
+
+
+class Leaf:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_ffn_weight_tp_and_fsdp():
+    r = rules()
+    spec = r.spec_for(("embed", "mlp"), (4096, 14336), MESH, r.param_rules())
+    assert spec == P(("data",), "model")
+
+
+def test_multi_pod_fsdp_uses_both_axes():
+    r = rules(multi=True)
+    spec = r.spec_for(("embed", "mlp"), (4096, 14336), MESH_MULTI, r.param_rules())
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_odd_head_count_falls_back_to_head_dim():
+    """hymba: 25 heads don't divide 16 -> head_dim takes the model axis
+    (contraction over head_dim psums cheaply), embed keeps FSDP."""
+    r = rules()
+    spec = r.spec_for(("embed", "heads", "head_dim"), (1600, 25, 64), MESH, r.param_rules())
+    assert spec == P(("data",), None, "model")
+
+
+def test_arctic_56_heads_fall_back():
+    r = rules()
+    spec = r.spec_for(("embed", "heads", "head_dim"), (7168, 56, 128), MESH, r.param_rules())
+    assert spec == P(("data",), None, "model")
+
+
+def test_expert_dim_gets_model_axis():
+    r = rules()
+    spec = r.spec_for(("expert", "embed", "expert_mlp"), (128, 7168, 4864), MESH, r.param_rules())
+    # expert wins "model" (first come), embed takes FSDP, expert_mlp replicated
+    assert spec == P("model", ("data",), None)
+
+
+def test_no_mesh_axis_used_twice_per_tensor():
+    r = rules()
+    for arch in ["arctic-480b", "hymba-1.5b", "qwen3-moe-235b-a22b"]:
+        cfg = get_config(arch)
+        axes_tree = param_logical_axes(cfg)
+        params = abstract_params(cfg)
+        flat_axes = jax.tree.leaves(
+            axes_tree, is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+        )
+        flat_leaves = jax.tree.leaves(params)
+        for axes, leaf in zip(flat_axes, flat_leaves):
+            spec = r.spec_for(axes, leaf.shape, MESH, r.param_rules())
+            used = []
+            for entry in spec:
+                if entry is None:
+                    continue
+                axs = entry if isinstance(entry, tuple) else (entry,)
+                used.extend(axs)
+            assert len(used) == len(set(used)), f"{arch}: {axes} -> {spec}"
+
+
+def test_vocab_tables_never_fsdp_on_embed_dim():
+    cfg = get_config("mistral-nemo-12b")
+    r = rules()
+    spec = r.spec_for(("vocab", "embed_v"), (cfg.padded_vocab, cfg.d_model), MESH, r.param_rules())
+    assert spec == P("model", None)
+
+
+def test_cache_kv_head_fallback_to_sequence():
+    """GQA kv=8 cannot shard over model=16 -> the kv_seq dim takes it."""
+    r = rules()
+    spec = r.spec_for(
+        ("layers", "kv_batch", "kv_seq", "kv_heads", None), (40, 128, 32768, 8, 128), MESH, r.cache_rules()
+    )
+    assert spec == P(None, ("data",), "model", None, None)
+
+
+def test_kv_heads_preferred_when_divisible():
+    r = rules()
+    spec = r.spec_for(
+        ("layers", "kv_batch", "kv_seq", "kv_heads", None), (28, 128, 32768, 16, 256), MESH, r.cache_rules()
+    )
+    assert spec == P(None, ("data",), None, "model", None)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    dims=st.lists(st.integers(min_value=1, max_value=8192), min_size=1, max_size=4),
+    axes=st.lists(
+        st.sampled_from(["embed", "mlp", "heads", "kv_heads", "vocab", "expert", "batch", None]),
+        min_size=1,
+        max_size=4,
+    ),
+)
+def test_spec_engine_invariants(dims, axes):
+    """Property: every produced spec (a) only shards divisible dims,
+    (b) never reuses a mesh axis within one tensor."""
+    n = min(len(dims), len(axes))
+    dims, axes = tuple(dims[:n]), tuple(axes[:n])
+    r = rules()
+    spec = r.spec_for(axes, dims, MESH, r.param_rules())
+    used = []
+    for dim, entry in zip(dims, spec):
+        if entry is None:
+            continue
+        axs = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axs:
+            size *= MESH.shape[a]
+        assert dim % size == 0, f"dim {dim} sharded by {size}"
+        used.extend(axs)
+    assert len(used) == len(set(used))

@@ -1,0 +1,85 @@
+"""End-to-end facility scenario: the paper's platform in one test.
+
+A phase-1-like cluster hosts two tenants; a training job runs under the QoS
+scheduler with periodic checkpoints; a node fails mid-run and the job resumes
+bit-exactly; an inference tenant serves requests through the continuous-
+batching engine; the DCIM ledger accounts energy under the PUE target.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import RunConfig, TrainConfig
+from repro.config.model import reduce_for_smoke
+from repro.configs import get_config
+from repro.core import (
+    Cluster,
+    ClusterSpec,
+    FaultTolerantRunner,
+    IAM,
+    Job,
+    JobState,
+    QoS,
+    Role,
+    Scheduler,
+    TenantManager,
+)
+from repro.data import make_batch_fn
+from repro.serving import InferenceEngine
+from repro.train.step import init_train_state, make_train_step
+
+
+def test_full_facility_scenario(tmp_path):
+    # --- facility + tenancy -------------------------------------------------
+    cluster = Cluster(ClusterSpec("phase1-mini", nodes_per_pod=6, num_pods=1))
+    iam = IAM(clock=lambda: 0.0)
+    admin = iam.federated_login("ops@bristol.ac.uk", "uob")
+    iam.grant("ops@bristol.ac.uk", Role.INFRA_ADMIN)
+    tenants = TenantManager(cluster, iam)
+    tenants.create_tenant("research", quota_nodes=4, admin="alice@inst", token=admin)
+    tenants.create_tenant("serving", quota_nodes=2, admin="bob@inst", token=admin)
+    tenants.grow_tenant("research", 3, token=admin)
+    tenants.grow_tenant("serving", 1, token=admin)
+    assert tenants.check_isolation() == []
+
+    # --- QoS scheduling -----------------------------------------------------
+    sched = Scheduler(cluster)
+    train_job = sched.submit(
+        Job("llm-train", "research", QoS.TRAINING, chips=8, duration=30, checkpoint_interval=5)
+    )
+    sched.tick(1)
+    assert train_job.state == JobState.RUNNING
+
+    # --- real training under fault tolerance --------------------------------
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    run = RunConfig(arch="olmo-1b", train=TrainConfig(global_batch=4, seq_len=16))
+    state = init_train_state(cfg, run, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, run))
+    runner = FaultTolerantRunner(
+        step_fn=step,
+        init_state=state,
+        batch_fn=make_batch_fn(cfg, global_batch=4, seq_len=16),
+        cluster=cluster,
+        ckpt=CheckpointManager(tmp_path, keep=2, async_save=False),
+        job_id="llm-train",
+        checkpoint_every=4,
+    )
+    report = runner.run(10, failure_schedule={6: train_job.nodes[0]})
+    assert report.failures == 1 and report.restores == 1
+    assert max(report.losses) == 10
+    assert np.isfinite(list(report.losses.values())).all()
+
+    # --- serving tenant -----------------------------------------------------
+    params = runner.state.params
+    eng = InferenceEngine(cfg, params, max_batch=2, max_seq=64)
+    r1 = eng.submit([3, 1, 4], max_new_tokens=4)
+    r2 = eng.submit([1, 5, 9], max_new_tokens=4, online=False)
+    eng.run_until_drained()
+    assert len(r1.generated) == 4 and len(r2.generated) == 4
+
+    # --- sustainability accounting -------------------------------------------
+    rep = runner.ledger.report()
+    assert rep["effective_pue"] < 1.1
+    assert rep["facility_kwh"] > 0

@@ -1,0 +1,68 @@
+"""TAPMS-style tenancy + RBAC-lite federation."""
+
+import pytest
+
+from repro.core import Cluster, ClusterSpec, IAM, Role, TenantManager
+
+
+def setup():
+    cluster = Cluster(ClusterSpec("t", nodes_per_pod=8, num_pods=2))
+    iam = IAM(token_ttl=100.0, clock=lambda: 0.0)
+    mgr = TenantManager(cluster, iam)
+    admin_tok = iam.federated_login("admin@bristol.ac.uk", "uob-idp")
+    iam.grant("admin@bristol.ac.uk", Role.INFRA_ADMIN)
+    return cluster, iam, mgr, admin_tok
+
+
+def test_tenant_lifecycle_and_rcn():
+    cluster, iam, mgr, tok = setup()
+    t = mgr.create_tenant("ai-safety", quota_nodes=4, admin="alice@inst.ac.uk", token=tok)
+    mgr.grow_tenant("ai-safety", 3, token=tok)
+    assert len(t.nodes) == 3
+    assert t.rcn == t.nodes[0]  # first node repurposed as login frontend
+    assert t.chips == 12
+
+
+def test_quota_enforced():
+    cluster, iam, mgr, tok = setup()
+    mgr.create_tenant("small", quota_nodes=2, admin="bob@x", token=tok)
+    with pytest.raises(PermissionError):
+        mgr.grow_tenant("small", 3, token=tok)
+
+
+def test_rbac_denies_non_admin():
+    cluster, iam, mgr, tok = setup()
+    user_tok = iam.federated_login("mallory@other", "idp")
+    with pytest.raises(PermissionError):
+        mgr.create_tenant("evil", quota_nodes=1, admin="mallory@other", token=user_tok)
+
+
+def test_token_expiry():
+    now = [0.0]
+    iam = IAM(token_ttl=10.0, clock=lambda: now[0])
+    tok = iam.federated_login("a@b", "idp")
+    iam.resolve(tok)
+    now[0] = 11.0
+    with pytest.raises(PermissionError):
+        iam.resolve(tok)
+
+
+def test_isolation_invariant():
+    cluster, iam, mgr, tok = setup()
+    mgr.create_tenant("t1", quota_nodes=4, admin="a@x", token=tok)
+    mgr.create_tenant("t2", quota_nodes=4, admin="b@y", token=tok)
+    mgr.grow_tenant("t1", 2, token=tok)
+    mgr.grow_tenant("t2", 2, token=tok)
+    assert mgr.check_isolation() == []
+    t1_nodes = set(mgr.tenants["t1"].nodes)
+    t2_nodes = set(mgr.tenants["t2"].nodes)
+    assert not (t1_nodes & t2_nodes)
+
+
+def test_tenant_submesh_shape():
+    cluster, iam, mgr, tok = setup()
+    mgr.create_tenant("t1", quota_nodes=4, admin="a@x", token=tok)
+    mgr.grow_tenant("t1", 4, token=tok)
+    assert mgr.tenant_submesh_shape("t1", model_parallel=4) == (4, 4)
+    with pytest.raises(ValueError):
+        mgr.tenant_submesh_shape("t1", model_parallel=5)
