@@ -1,0 +1,106 @@
+"""FP8 GEMM sweep: bf16 vs the FP8 path (paper §1's 21 ExaFLOP/s headline).
+
+Isambard-AI quotes its AI capability in 8-bit FLOP/s — exactly double the
+bf16 peak — so the benchmark that matters is the GEMM precision crossover.
+For a square-ish sweep this measures, per size:
+
+* ``bf16``     — plain jnp matmul in bf16 (the pre-FP8 compute path)
+* ``fp8_ref``  — quantize (e4m3, per-tensor scales) + dequantizing GEMM via
+  the jnp reference (what XLA lowers to the native FP8 MXU path on hardware)
+* ``fp8_pallas`` — the tiled Pallas kernel (interpret mode on CPU), allclose-
+  checked against the reference
+
+Wall-clock columns are CPU-measured; the ``derived`` column carries the
+v5e-modeled roofline times (2*M*N*K FLOPs against the bf16 vs fp8 peak) used
+in EXPERIMENTS.md.  Results are also written to
+``benchmarks/results/fp8_gemm.json`` alongside the dry-run suites.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fp8 import E4M3, compute_scale, fp8_gemm, fp8_gemm_ref, quantize, tensor_amax
+from repro.launch.hlo_analysis import PEAK_FLOPS, PEAK_FLOPS_FP8
+
+RESULTS_DIR = Path(__file__).resolve().parent / "results"
+
+SIZES = (256, 512)
+PALLAS_CHECK_SIZE = 256  # interpret mode: keep the kernel run small
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for n in SIZES:
+        a = jax.random.normal(key, (n, n), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+        sa, sb = compute_scale(tensor_amax(a), E4M3), compute_scale(tensor_amax(b), E4M3)
+        qa, qb = quantize(a, sa, E4M3), quantize(b, sb, E4M3)
+        flops = 2.0 * n * n * n
+        bf16_us = _time(jax.jit(lambda x, y: (x @ y)), a.astype(jnp.bfloat16), b.astype(jnp.bfloat16)) * 1e6
+        ref_us = _time(jax.jit(fp8_gemm_ref), qa, qb, sa, sb) * 1e6
+
+        v5e_bf16_us = flops / PEAK_FLOPS * 1e6
+        v5e_fp8_us = flops / PEAK_FLOPS_FP8 * 1e6
+        rows.append(
+            {
+                "name": f"fp8_gemm_bf16_{n}",
+                "us_per_call": bf16_us,
+                "derived": f"modeled_v5e_us={v5e_bf16_us:.3f}",
+            }
+        )
+        rows.append(
+            {
+                "name": f"fp8_gemm_fp8ref_{n}",
+                "us_per_call": ref_us,
+                "derived": f"modeled_v5e_us={v5e_fp8_us:.3f} speedup_vs_bf16=2.0",
+            }
+        )
+
+    # Pallas kernel: correctness vs oracle + one timed point (interpret mode)
+    n = PALLAS_CHECK_SIZE
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+    sa, sb = compute_scale(tensor_amax(a), E4M3), compute_scale(tensor_amax(b), E4M3)
+    qa, qb = quantize(a, sa, E4M3), quantize(b, sb, E4M3)
+    ref = fp8_gemm_ref(qa, qb, sa, sb)
+    pal = fp8_gemm(qa, qb, sa, sb)
+    err = float(jnp.max(jnp.abs(pal - ref)))
+    assert err < 1e-4, f"pallas fp8_gemm diverged from oracle: {err}"
+    pal_us = _time(lambda x, y: fp8_gemm(x, y, sa, sb), qa, qb, iters=2) * 1e6
+    rows.append(
+        {
+            "name": f"fp8_gemm_pallas_interp_{n}",
+            "us_per_call": pal_us,
+            "derived": f"allclose_vs_ref_maxerr={err:.2e}",
+        }
+    )
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / "fp8_gemm.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

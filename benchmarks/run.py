@@ -4,6 +4,7 @@
     Fig. 9  -> llm_inference    (llama.cpp-style decode throughput)
     Fig. 10 -> babelstream      (memory bandwidth, Pallas kernels)
     Fig. 11 -> cloverleaf       (stencil weak scaling, shard_map halos)
+    §1      -> fp8_gemm         (bf16 vs FP8-path GEMM, 8-bit peak headline)
 
 Each prints ``name,us_per_call,derived`` rows.  On this CPU image the
 wall-clock columns are CPU-measured (reduced configs / interpret mode); the
@@ -17,11 +18,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import babelstream, cloverleaf, llm_inference, mlperf_train
+    from benchmarks import babelstream, cloverleaf, fp8_gemm, llm_inference, mlperf_train
 
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (mlperf_train, llm_inference, babelstream, cloverleaf):
+    for mod in (mlperf_train, llm_inference, babelstream, cloverleaf, fp8_gemm):
         try:
             for r in mod.run():
                 derived = r.get("derived") or f"modeled_v5e_us={r.get('modeled_tpu_us', r.get('modeled_v5e_us', 0)):.1f}"

@@ -77,6 +77,15 @@ class PrecisionConfig:
     optimizer_dtype: str = "float32"
     logits_dtype: str = "float32"
 
+    # --- FP8 quantized training (repro.fp8) ---
+    # Route FFN + attention-projection GEMMs through FP8 with delayed
+    # scaling; logits/norms/softmax stay on the mixed-precision path above.
+    fp8: bool = False
+    fp8_dtype: str = "e4m3"  # forward operand dtype; gradients always use e5m2
+    fp8_amax_history: int = 16  # delayed-scaling amax window (steps)
+    fp8_margin: float = 0.0  # scale headroom: scale = fp8_max / (2^margin * amax)
+    fp8_gemm: str = "ref"  # "ref" (jnp/XLA) | "pallas" (tiled TPU kernel)
+
 
 @dataclass(frozen=True)
 class TrainConfig:

@@ -1,0 +1,56 @@
+"""FP8 quantized training: e4m3/e5m2 casts, delayed scaling, FP8 GEMMs.
+
+See ``quantize`` (scales + ``Fp8State`` + ``fp8_dot``), ``gemm`` (Pallas
+tiled kernel), ``gemm_ref`` (jnp oracle) and ``policy`` (site selection +
+``Fp8Ctx`` forward context).  Enabled via ``PrecisionConfig.fp8``.
+"""
+
+from repro.fp8.gemm import fp8_gemm
+from repro.fp8.gemm_ref import fp8_gemm_ref
+from repro.fp8.policy import (
+    Fp8Ctx,
+    fp8_peak_applies,
+    fp8_sites,
+    fp8_supported,
+    make_fp8_ctx,
+    make_fp8_state,
+    scale_keys,
+)
+from repro.fp8.quantize import (
+    E4M3,
+    E5M2,
+    FP8_DTYPES,
+    FP8_MAX,
+    Fp8State,
+    compute_scale,
+    dequantize,
+    fp8_dot,
+    init_fp8_state,
+    quantize,
+    tensor_amax,
+    update_fp8_state,
+)
+
+__all__ = [
+    "E4M3",
+    "E5M2",
+    "FP8_DTYPES",
+    "FP8_MAX",
+    "Fp8Ctx",
+    "Fp8State",
+    "compute_scale",
+    "dequantize",
+    "fp8_dot",
+    "fp8_gemm",
+    "fp8_gemm_ref",
+    "fp8_peak_applies",
+    "fp8_sites",
+    "fp8_supported",
+    "init_fp8_state",
+    "make_fp8_ctx",
+    "make_fp8_state",
+    "quantize",
+    "scale_keys",
+    "tensor_amax",
+    "update_fp8_state",
+]

@@ -1,0 +1,28 @@
+"""Pure-jnp FP8 GEMM reference: the oracle for the Pallas kernel tests, and
+the default model-path implementation (XLA lowers it straight to the native
+FP8 MXU path on hardware that has one; in fp32 emulation on CPU it is
+bit-faithful to the kernel's dequantize-then-accumulate order).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fp8_gemm_ref(
+    a: jax.Array,  # (M, K) fp8
+    b: jax.Array,  # (K, N) fp8
+    a_scale: jax.Array,  # () fp32
+    b_scale: jax.Array,  # () fp32
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Dequantizing GEMM: upcast fp8 operands, accumulate in fp32, divide by
+    the combined scale."""
+    acc = jax.lax.dot_general(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return (acc / (a_scale * b_scale)).astype(out_dtype)

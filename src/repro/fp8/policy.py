@@ -1,0 +1,168 @@
+"""Which matmuls run FP8, and the per-forward quantization context.
+
+Policy (the standard "FP8 for LLM training" recipe):
+
+* **quantized** — the six/seven big projection GEMMs per block: attention
+  q/k/v/o and the FFN up/gate/down.  These carry ~all of a transformer's
+  FLOPs and are what the paper's 21 ExaFLOP/s FP8 peak is quoted for.
+* **high precision** — everything numerically fragile stays on the existing
+  mixed-precision path: logits (fp32), norms + softmax statistics (fp32),
+  embeddings, router/MoE dispatch, RWKV/SSM scans, biases, residual stream.
+
+Families: ``dense``/``audio``/``hybrid`` quantize attention + FFN; ``moe``
+quantizes attention (+ the Arctic dense-residual FFN when present — routed
+expert FFNs keep bf16: their per-expert token groups are too small to
+amortize per-tensor scales).  ``ssm`` has no quantizable projections and
+``vlm`` scans layer *groups* (amax collection across the nested scan is not
+wired); both fall back to bf16, reported by ``fp8_supported``.
+
+``Fp8Ctx`` is the per-forward bridge between the pure model functions and the
+delayed-scaling state: ``matmul(site, x, w)`` routes one projection through
+``fp8_dot`` using the scales carried in ``Fp8State`` and records the observed
+amaxes; the train body drains them into the scan carry each layer, and the
+train step folds them into the next step's ``Fp8State``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.fp8 import gemm, gemm_ref
+from repro.fp8.quantize import (
+    FP8_DTYPES,
+    Fp8State,
+    fp8_dot,
+    init_fp8_state,
+    tensor_amax,
+    update_fp8_state,
+)
+
+SUPPORTED_FAMILIES = ("dense", "audio", "moe", "hybrid")
+
+ATTN_SITES = ("attn_q", "attn_k", "attn_v", "attn_o")
+FFN_SITES = ("ffn_up", "ffn_gate", "ffn_down")
+
+GEMM_IMPLS = {
+    "ref": gemm_ref.fp8_gemm_ref,
+    "pallas": gemm.fp8_gemm,
+}
+
+
+def fp8_supported(cfg) -> bool:
+    return cfg.family in SUPPORTED_FAMILIES
+
+
+def fp8_peak_applies(cfg) -> bool:
+    """Whether a roofline should cost this arch's fp8 run at the FP8 peak.
+
+    Only when the quantized sites carry the *dominant* GEMM FLOPs: moe is
+    excluded — its routed expert FFNs (the bulk of active FLOPs) stay bf16,
+    so costing the whole cell at 2x would understate compute_s by ~2x.
+    """
+    return fp8_supported(cfg) and cfg.family != "moe"
+
+
+def fp8_sites(cfg) -> list[str]:
+    """GEMM sites quantized for this architecture (stable order — the site
+    list fixes the ``Fp8State`` pytree structure)."""
+    from repro.models.ffn import is_gated
+
+    sites: list[str] = []
+    if cfg.has_attention:
+        sites += list(ATTN_SITES)
+    uses_dense_ffn = cfg.family != "moe" or (cfg.moe is not None and cfg.moe.dense_residual)
+    if cfg.family in SUPPORTED_FAMILIES and uses_dense_ffn:
+        for s in FFN_SITES:
+            if s == "ffn_gate" and not is_gated(cfg.activation):
+                continue
+            sites.append(s)
+    return sites
+
+
+def scale_keys(cfg) -> list[str]:
+    """One delayed scale per GEMM operand: ``<site>/x`` and ``<site>/w``."""
+    return [f"{s}/{op}" for s in fp8_sites(cfg) for op in ("x", "w")]
+
+
+def make_fp8_state(cfg, precision) -> Fp8State:
+    # per-tensor scales: one (history, scale) row per GEMM operand per layer
+    return init_fp8_state(
+        scale_keys(cfg), window=precision.fp8_amax_history, num_layers=cfg.num_layers
+    )
+
+
+class Fp8Ctx:
+    """Routes projection matmuls through FP8 and collects amax observations.
+
+    One context is created per traced forward (it holds Python-side mutable
+    observation state scoped to that trace): the model's scan body calls
+    ``bind_layer_scales`` with this layer's slice of the delayed scales
+    (threaded through the scan as an input alongside the stacked params),
+    the block bodies call ``matmul``, and the scan body calls ``drain`` once
+    per layer, emitting the observed amaxes as a per-layer scan output — so
+    observations never leak across ``lax.scan``/``jax.checkpoint`` trace
+    boundaries, and every quantized tensor gets its own scale.
+    """
+
+    def __init__(self, cfg, precision, state: Fp8State):
+        if precision.fp8_dtype not in FP8_DTYPES:
+            raise ValueError(
+                f"precision.fp8_dtype={precision.fp8_dtype!r}: expected one of {sorted(FP8_DTYPES)}"
+            )
+        if precision.fp8_gemm not in GEMM_IMPLS:
+            raise ValueError(
+                f"precision.fp8_gemm={precision.fp8_gemm!r}: expected one of {sorted(GEMM_IMPLS)}"
+            )
+        self.cfg = cfg
+        self.fwd_dtype = FP8_DTYPES[precision.fp8_dtype]
+        self.margin = precision.fp8_margin
+        self.gemm_fn = GEMM_IMPLS[precision.fp8_gemm]
+        self.state = state
+        self.keys = scale_keys(cfg)
+        self._amax: dict[str, jax.Array] = {}
+        self._layer_scale: dict[str, jax.Array] | None = None
+
+    # -- observation plumbing ------------------------------------------------
+    def layer_scales(self) -> dict:
+        """The full per-layer scale tree, to be scanned over as an input
+        (leading dim = num_layers, matching the stacked block params)."""
+        return jax.lax.stop_gradient(self.state.scale)
+
+    def bind_layer_scales(self, scales: dict) -> None:
+        """Install this layer's () scale slice (called by the scan body)."""
+        self._layer_scale = scales
+
+    def _observe(self, key: str, amax: jax.Array) -> None:
+        prev = self._amax.get(key)
+        self._amax[key] = amax if prev is None else jnp.maximum(prev, amax)
+
+    def drain(self) -> dict:
+        """All site amaxes observed since the last drain (zeros elsewhere)."""
+        obs = {k: self._amax.get(k, jnp.zeros((), jnp.float32)) for k in self.keys}
+        self._amax = {}
+        return obs
+
+    # -- the quantized matmul ------------------------------------------------
+    def matmul(self, site: str, x: jax.Array, w: jax.Array) -> jax.Array:
+        """``x @ w`` through the FP8 path.
+
+        x: (..., K) activations (compute dtype); w: (K, N) master weights.
+        Returns (..., N) in ``x.dtype``.  Scales are this layer's slice of
+        the delayed state, bound by the scan body (stop-gradient — they
+        steer quantization, not learning).
+        """
+        if self._layer_scale is None:
+            raise RuntimeError("Fp8Ctx.matmul called before bind_layer_scales (scan body)")
+        kx, kw = f"{site}/x", f"{site}/w"
+        x2 = x.reshape((-1, x.shape[-1]))
+        self._observe(kx, tensor_amax(x2))
+        self._observe(kw, tensor_amax(w))
+        out = fp8_dot(
+            x2, w, self._layer_scale[kx], self._layer_scale[kw], self.fwd_dtype, self.gemm_fn
+        )
+        return out.astype(x.dtype).reshape(x.shape[:-1] + (w.shape[-1],))
+
+
+def make_fp8_ctx(cfg, precision, state: Fp8State) -> Fp8Ctx:
+    return Fp8Ctx(cfg, precision, state)

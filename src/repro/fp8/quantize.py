@@ -1,0 +1,153 @@
+"""FP8 cast/dequant, per-tensor scales, and delayed scaling.
+
+The Isambard-AI paper's headline training number is its **21 ExaFLOP/s of
+8-bit floating point** — double the bf16 peak — so the compute path needs an
+FP8 story to run "as fast as the hardware allows".  This module implements
+the standard FP8 training recipe (Micikevicius et al., arXiv:2209.05433, as
+productionized by Transformer Engine):
+
+* **e4m3** for forward tensors (activations + weights): more mantissa,
+  max-normal 448.
+* **e5m2** for gradients: more range (max-normal 57344) for the long tail of
+  small backward values.
+* **per-tensor scales** map each tensor's dynamic range onto the FP8 window:
+  ``q = cast(clip(x * scale))``, ``x ~= q / scale`` with
+  ``scale = fp8_max / (2^margin * amax)``.
+* **delayed scaling**: the scale used at step *t* is derived from an
+  *amax history* window of the previous steps (``Fp8State``), so quantization
+  is a cheap elementwise op with no data-dependent reduction on the forward
+  critical path.  Gradients use just-in-time (current) scaling instead —
+  their amax is only known during the backward pass.
+
+Saturation note: JAX's ``astype(float8_*)`` maps out-of-range values to NaN,
+so every cast here clips into the representable window first (saturating
+quantization, matching TE's behavior).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+E4M3 = jnp.float8_e4m3fn
+E5M2 = jnp.float8_e5m2
+
+FP8_DTYPES = {"e4m3": E4M3, "e5m2": E5M2}
+FP8_MAX = {E4M3: 448.0, E5M2: 57344.0}
+
+_AMAX_EPS = 1e-12  # guards the 0-amax (never-observed) scale
+
+
+def compute_scale(amax: jax.Array, dtype, margin: float = 0.0) -> jax.Array:
+    """Scale that maps [-amax, amax] onto the FP8 window (minus 2^margin headroom)."""
+    amax = jnp.maximum(amax.astype(jnp.float32), _AMAX_EPS)
+    return jnp.float32(FP8_MAX[dtype]) / (amax * jnp.float32(2.0**margin))
+
+
+def quantize(x: jax.Array, scale: jax.Array, dtype=E4M3) -> jax.Array:
+    """Saturating cast to FP8: clip(x * scale) in fp32, then narrow."""
+    m = FP8_MAX[dtype]
+    y = x.astype(jnp.float32) * scale
+    return jnp.clip(y, -m, m).astype(dtype)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) / scale).astype(dtype)
+
+
+def tensor_amax(x: jax.Array) -> jax.Array:
+    """Observed absolute max, detached (amaxes steer scales, not gradients)."""
+    return jax.lax.stop_gradient(jnp.max(jnp.abs(x)).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# delayed-scaling state
+# ---------------------------------------------------------------------------
+
+
+class Fp8State(NamedTuple):
+    """Per-tensor delayed-scaling state, carried as a pytree in ``TrainState``.
+
+    Scales are per GEMM operand *per layer* (one quantized tensor = one
+    scale, the TE recipe): ``amax_history``: dict site-key ->
+    (num_layers, window) fp32, newest observation first along the window
+    axis.  ``scale``: dict site-key -> (num_layers,) fp32, the scales *to
+    use* at the next step (derived from the history).  ``step`` counts
+    applied updates.
+    """
+
+    amax_history: Any
+    scale: Any
+    step: jax.Array
+
+
+def init_fp8_state(keys: list[str], window: int, num_layers: int = 1) -> Fp8State:
+    return Fp8State(
+        amax_history={k: jnp.zeros((num_layers, window), jnp.float32) for k in keys},
+        scale={k: jnp.ones((num_layers,), jnp.float32) for k in keys},
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def update_fp8_state(state: Fp8State, amaxes: dict, dtype=E4M3, margin: float = 0.0) -> Fp8State:
+    """Roll each site's amax window and recompute its per-layer scales.
+
+    ``amaxes``: dict site-key -> (num_layers,) fp32 observed this step (a
+    site that was not exercised reports 0 and simply ages the window).
+    """
+
+    def roll(hist, obs):
+        obs = jnp.broadcast_to(obs.astype(jnp.float32), (hist.shape[0],))
+        return jnp.concatenate([obs[:, None], hist[:, :-1]], axis=1)
+
+    new_hist = {k: roll(state.amax_history[k], amaxes[k]) for k in state.amax_history}
+    new_scale = {k: compute_scale(jnp.max(h, axis=1), dtype, margin) for k, h in new_hist.items()}
+    return Fp8State(amax_history=new_hist, scale=new_scale, step=state.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# FP8 matmul with straight-through quantization gradients
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def fp8_dot(x, w, x_scale, w_scale, fwd_dtype, gemm_fn):
+    """``x @ w`` through the FP8 path: quantize both operands with the given
+    (delayed) scales, run the fp32-accumulating FP8 GEMM, dequantize.
+
+    x: (M, K), w: (K, N); returns (M, N) fp32.  ``gemm_fn`` is one of the
+    ``repro.fp8`` GEMM implementations (Pallas kernel or jnp reference) with
+    signature ``(a_q, b_q, a_scale, b_scale) -> fp32``.
+    """
+    qx = quantize(x, x_scale, fwd_dtype)
+    qw = quantize(w, w_scale, fwd_dtype)
+    return gemm_fn(qx, qw, x_scale, w_scale)
+
+
+def _fp8_dot_fwd(x, w, x_scale, w_scale, fwd_dtype, gemm_fn):
+    qx = quantize(x, x_scale, fwd_dtype)
+    qw = quantize(w, w_scale, fwd_dtype)
+    out = gemm_fn(qx, qw, x_scale, w_scale)
+    # zero-size dtype witnesses: cotangents must match the primal dtypes
+    return out, (qx, qw, x_scale, w_scale, jnp.zeros((), x.dtype), jnp.zeros((), w.dtype))
+
+
+def _fp8_dot_bwd(fwd_dtype, gemm_fn, res, g):
+    """Backward GEMMs in e5m2 with current (just-in-time) scaling.
+
+    dx = g @ w^T and dw = x^T @ g reuse the *quantized* forward operands —
+    exactly the values the forward consumed — so the quantization gradient is
+    straight-through (clip saturation included via the saved fp8 values).
+    """
+    qx, qw, sx, sw, x_wit, w_wit = res
+    g_scale = compute_scale(tensor_amax(g), E5M2)
+    qg = quantize(g, g_scale, E5M2)
+    dx = gemm_fn(qg, qw.T, g_scale, sw).astype(x_wit.dtype)
+    dw = gemm_fn(qx.T, qg, sx, g_scale).astype(w_wit.dtype)
+    return dx, dw, jnp.zeros_like(sx), jnp.zeros_like(sw)
+
+
+fp8_dot.defvjp(_fp8_dot_fwd, _fp8_dot_bwd)

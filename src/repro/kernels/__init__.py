@@ -6,6 +6,7 @@ oracle used by the allclose test sweeps).  TPU is the TARGET; on this CPU
 image everything runs through ``interpret=True``.
 """
 
+from repro.fp8.gemm import fp8_gemm
 from repro.kernels import flash_attention_ops
 from repro.kernels.babelstream import (
     stream_add,
@@ -21,6 +22,7 @@ from repro.kernels.rwkv6_scan_ops import wkv6
 __all__ = [
     "flash_attention",
     "flash_attention_ops",
+    "fp8_gemm",
     "stream_add",
     "stream_bytes",
     "stream_copy",

@@ -241,9 +241,16 @@ def run_cell(arch: str, shape_name: str, mesh_cfg: MeshConfig, mesh, knobs=None,
     mem = memory_stats(compiled)
     # HLO is the SPMD-partitioned per-device module, so operand bytes are
     # already per-device — matching the per-device flops/bytes convention.
-    terms = roofline_terms(flops, byts, colls.total_operand_bytes)
+    # Only cost against the FP8 peak when the step actually ran FP8 AND the
+    # quantized sites carry the dominant GEMM FLOPs (ssm/vlm fall back to
+    # bf16; moe keeps routed expert FFNs bf16 — see repro.fp8.policy).
+    from repro.fp8 import fp8_peak_applies
+
+    is_fp8 = bool(run.precision.fp8) and fp8_peak_applies(cfg) and kind == "train"
+    terms = roofline_terms(flops, byts, colls.total_operand_bytes, fp8=is_fp8)
     rec.update(
         {
+            "fp8": is_fp8,
             "per_device_flops": flops,
             "per_device_hbm_bytes": byts,
             "xla_body_flops": xla_flops,
@@ -263,8 +270,7 @@ def run_cell(arch: str, shape_name: str, mesh_cfg: MeshConfig, mesh, knobs=None,
     if verbose:
         print(f"  memory_analysis: {compiled.memory_analysis()}")
         print(f"  jaxpr cost (global): flops={est['flops']:.4g} hbm_bytes={est['hbm_bytes']:.4g}")
-        ca = compiled.cost_analysis()
-        print(f"  cost_analysis (per-iter lower bound): flops={ca.get('flops'):.4g} bytes={ca.get('bytes accessed'):.4g}")
+        print(f"  cost_analysis (per-iter lower bound): flops={xla_flops:.4g} bytes={xla_bytes:.4g}")
         print(
             f"  collectives: { {k: f'{v/1e6:.1f}MB' for k, v in colls.operand_bytes.items()} }"
         )
@@ -299,6 +305,9 @@ def main() -> None:
     ap.add_argument("--arch", default="all", help="'all' or comma-separated arch ids")
     ap.add_argument("--shape", default="all", help="'all' or comma-separated shape names")
     ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument(
+        "--fp8", action="store_true", help="lower train cells with FP8 quantized training enabled"
+    )
     args = ap.parse_args()
 
     archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
@@ -311,13 +320,24 @@ def main() -> None:
         results = load_results(mesh_name)
         for arch in archs:
             for shape_name in shapes:
-                key = f"{arch}|{shape_name}"
+                # fp8 cells get their own cache rows so a sweep can hold both
+                # precisions side by side (rec carries an "fp8" field too)
+                key = f"{arch}|{shape_name}" + ("|fp8" if args.fp8 else "")
                 if key in results and not args.force and "error" not in results[key]:
                     print(f"[{mesh_name}] {key}: cached ({results[key]['status']})")
                     continue
                 print(f"[{mesh_name}] {key}: lowering...", flush=True)
+                knobs = None
+                if args.fp8:
+                    import dataclasses
+
+                    from repro.launch.specs import TRAIN_KNOBS, CellKnobs
+
+                    knobs = dataclasses.replace(
+                        TRAIN_KNOBS.get(arch, CellKnobs()), fp8=True
+                    )
                 try:
-                    rec = run_cell(arch, shape_name, mesh_cfg, mesh)
+                    rec = run_cell(arch, shape_name, mesh_cfg, mesh, knobs)
                 except Exception as e:  # a failure here is a bug in the system
                     traceback.print_exc()
                     rec = {

@@ -205,15 +205,30 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
 # ---------------------------------------------------------------------------
 
 PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+# FP8 matmul peak: 2x bf16, the GH200-class ratio behind Isambard-AI's
+# "21 ExaFLOP/s of 8-bit floating point" headline (arXiv:2410.11199 §1).
+PEAK_FLOPS_FP8 = 394e12
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
 
 
-def roofline_terms(per_device_flops: float, per_device_bytes: float, collective_operand_bytes: float) -> dict:
+def peak_flops(fp8: bool = False) -> float:
+    """Per-chip matmul peak for the run's GEMM precision (fp8 doubles it)."""
+    return PEAK_FLOPS_FP8 if fp8 else PEAK_FLOPS
+
+
+def roofline_terms(
+    per_device_flops: float,
+    per_device_bytes: float,
+    collective_operand_bytes: float,
+    *,
+    fp8: bool = False,
+) -> dict:
     """The assignment's three terms, in seconds (all quantities per device,
-    equivalent to global quantities divided by chip count)."""
+    equivalent to global quantities divided by chip count).  ``fp8`` runs are
+    costed against the doubled 8-bit matmul peak."""
     return {
-        "compute_s": per_device_flops / PEAK_FLOPS,
+        "compute_s": per_device_flops / peak_flops(fp8),
         "memory_s": per_device_bytes / HBM_BW,
         "collective_s": collective_operand_bytes / ICI_BW,
     }
@@ -230,6 +245,8 @@ def extract_cost(compiled) -> tuple[float, float]:
     reference lower bounds; the roofline uses the jaxpr cost model.
     """
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: one properties dict per device
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     return flops, byts

@@ -20,7 +20,7 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.launch.hlo_analysis import PEAK_FLOPS
+from repro.launch.hlo_analysis import peak_flops
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
 HBM_LIMIT = 16e9  # v5e HBM per chip
@@ -59,7 +59,8 @@ def cell_rows(results: dict) -> list[dict]:
         t = r["roofline"]
         bound = max(t.values())
         chips = r["n_devices"]
-        model_time = r["model_flops"] / (chips * PEAK_FLOPS)
+        # fp8 cells are costed against the doubled 8-bit matmul peak
+        model_time = r["model_flops"] / (chips * peak_flops(r.get("fp8", False)))
         kind = "train" if r["shape"].startswith("train") else ("prefill" if "prefill" in r["shape"] else "decode")
         rows.append(
             {
@@ -67,6 +68,7 @@ def cell_rows(results: dict) -> list[dict]:
                 "shape": r["shape"],
                 "status": "ok",
                 "kind": kind,
+                "fp8": r.get("fp8", False),
                 "params": r["params"],
                 "active_params": r["active_params"],
                 "compute_s": t["compute_s"],

@@ -81,6 +81,8 @@ class CellKnobs:
     optimizer_dtype: str | None = None
     grad_compression: str = "none"
     optimizer_layer_scan: bool = False
+    # FP8 quantized training (train cells only; see repro.fp8)
+    fp8: bool = False
 
 
 # Baseline knobs chosen by napkin math (activation bytes/device <= ~4 GB,
@@ -122,6 +124,7 @@ def run_config_for(arch: str, shape: ShapeConfig, mesh: MeshConfig, knobs: CellK
     prec = PrecisionConfig(
         param_dtype=(knobs.param_dtype or ("bfloat16" if shape.kind != "train" else "float32")),
         optimizer_dtype=knobs.optimizer_dtype or "float32",
+        fp8=knobs.fp8 and shape.kind == "train",
     )
     tr = TrainConfig(global_batch=shape.global_batch, seq_len=shape.seq_len)
     return RunConfig(arch=arch, mesh=mesh, parallel=par, precision=prec, train=tr)

@@ -19,7 +19,7 @@ import time
 import jax
 
 from repro.checkpoint import CheckpointManager
-from repro.config import ParallelConfig, RunConfig, TrainConfig
+from repro.config import ParallelConfig, PrecisionConfig, RunConfig, TrainConfig
 from repro.config.model import reduce_for_smoke
 from repro.configs import ASSIGNED, get_config
 from repro.core import Cluster, ClusterSpec, EnergyLedger, FaultTolerantRunner
@@ -39,6 +39,7 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--fail-at", type=int, default=0, help="inject a node failure at this step (chaos test)")
+    ap.add_argument("--fp8", action="store_true", help="FP8 quantized training (repro.fp8 delayed scaling)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -52,8 +53,14 @@ def main() -> None:
         arch=args.arch,
         train=TrainConfig(global_batch=args.batch, seq_len=args.seq, warmup_steps=5, total_steps=args.steps),
         parallel=ParallelConfig(num_microbatches=args.microbatches, remat="full"),
+        precision=PrecisionConfig(fp8=args.fp8),
     )
     state = init_train_state(cfg, run, jax.random.PRNGKey(args.seed))
+    if args.fp8:
+        # 2 scale keys (x + w operand) per quantized GEMM site
+        n_sites = 0 if state.fp8 is None else len(state.fp8.scale) // 2
+        print(f"[train] fp8: {'ON' if state.fp8 is not None else 'unsupported family, bf16 fallback'}"
+              f" ({n_sites} gemm sites, window={run.precision.fp8_amax_history})")
     step = jax.jit(make_train_step(cfg, run))
     batch_fn = make_batch_fn(cfg, global_batch=args.batch, seq_len=args.seq, seed=args.seed)
 

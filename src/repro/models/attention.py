@@ -60,12 +60,24 @@ def attention_specs(cfg, *, cross: bool = False) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _qkv(cfg, p, x, kv_x=None):
-    """Project to q,k,v. kv_x: source for k/v (cross-attention)."""
+def _qkv(cfg, p, x, kv_x=None, fp8=None):
+    """Project to q,k,v. kv_x: source for k/v (cross-attention).
+
+    ``fp8``: an ``repro.fp8.Fp8Ctx`` — routes the projection GEMMs through
+    quantized matmuls (the head-split is a free reshape around a 2-D GEMM).
+    """
     kv_src = x if kv_x is None else kv_x
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(x.dtype))
+    if fp8 is not None:
+        D = p["wq"].shape[0]
+        H, hd = p["wq"].shape[1], p["wq"].shape[2]
+        KV = p["wk"].shape[1]
+        q = fp8.matmul("attn_q", x, p["wq"].reshape(D, H * hd)).reshape(x.shape[:-1] + (H, hd))
+        k = fp8.matmul("attn_k", kv_src, p["wk"].reshape(D, KV * hd)).reshape(kv_src.shape[:-1] + (KV, hd))
+        v = fp8.matmul("attn_v", kv_src, p["wv"].reshape(D, KV * hd)).reshape(kv_src.shape[:-1] + (KV, hd))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(x.dtype))
     if cfg.use_bias:
         q = q + p["bq"].astype(x.dtype)
         k = k + p["bk"].astype(x.dtype)
@@ -82,8 +94,13 @@ def _rms_head(x, scale, eps):
     return (xf * scale.astype(jnp.float32)).astype(x.dtype)
 
 
-def _out(cfg, p, ctx, dtype):
-    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(dtype))
+def _out(cfg, p, ctx, dtype, fp8=None):
+    if fp8 is not None:
+        H, hd, D = p["wo"].shape
+        out = fp8.matmul("attn_o", ctx.reshape(ctx.shape[:-2] + (H * hd,)), p["wo"].reshape(H * hd, D))
+        out = out.astype(dtype)
+    else:
+        out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(dtype))
     if cfg.use_bias:
         out = out + p["bo"].astype(dtype)
     return out
@@ -144,12 +161,13 @@ def self_attention(
     q_chunk: int = 0,
     impl: str = "xla",
     sh=None,
+    fp8=None,
 ) -> jax.Array:
     """Full-sequence self-attention (training / prefill)."""
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-    q, k, v = _qkv(cfg, p, x)
+    q, k, v = _qkv(cfg, p, x, fp8=fp8)
     if cfg.rotary_pct > 0 and not cfg.learned_pos_embedding:
         q = apply_rope(q, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
         k = apply_rope(k, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
@@ -170,7 +188,7 @@ def self_attention(
         ctx = flash_attention_ops.flash_attention(
             q, k, v, causal=cfg.causal, window=cfg.sliding_window, softcap=cfg.attn_logit_softcap
         )
-        return _out(cfg, p, ctx, x.dtype)
+        return _out(cfg, p, ctx, x.dtype, fp8=fp8)
 
     qpk = cfg.q_per_kv
     if q_chunk and S > q_chunk and S % q_chunk == 0:
@@ -192,7 +210,7 @@ def self_attention(
         ctx = _attend_block(cfg, q, k, v, m[:, None, None], qpk)
     if sh is not None:
         ctx = sh(ctx, ("batch", "seq", "heads", None))
-    return _out(cfg, p, ctx, x.dtype)
+    return _out(cfg, p, ctx, x.dtype, fp8=fp8)
 
 
 def cross_attention(cfg, p: dict, x: jax.Array, kv_tokens: jax.Array, *, sh=None) -> jax.Array:

@@ -49,17 +49,19 @@ def dense_block_specs(cfg) -> dict:
     return specs
 
 
-def dense_block(cfg, p, x, *, positions=None, q_chunk=0, sh=None, attn_impl="xla"):
+def dense_block(cfg, p, x, *, positions=None, q_chunk=0, sh=None, attn_impl="xla", fp8=None):
     h = apply_norm(cfg, p["norm1"], x)
-    a = self_attention(cfg, p["attn"], h, positions=positions, q_chunk=q_chunk, sh=sh, impl=attn_impl)
+    a = self_attention(
+        cfg, p["attn"], h, positions=positions, q_chunk=q_chunk, sh=sh, impl=attn_impl, fp8=fp8
+    )
     if cfg.parallel_residual:
         # GPT-NeoX / StableLM parallel form: one LN, attn + FFN both from it
-        f = ffn(cfg, p["mlp"], h, sh=sh)
+        f = ffn(cfg, p["mlp"], h, sh=sh, fp8=fp8)
         x = x + a + f
     else:
         x = x + a
         h2 = apply_norm(cfg, p["norm2"], x)
-        x = x + ffn(cfg, p["mlp"], h2, sh=sh)
+        x = x + ffn(cfg, p["mlp"], h2, sh=sh, fp8=fp8)
     if sh is not None:
         x = sh(x, ("batch", "seq", "embed"))
     return x
@@ -109,16 +111,19 @@ def moe_block_specs(cfg) -> dict:
     return specs
 
 
-def moe_block(cfg, p, x, *, positions=None, q_chunk=0, sh=None, attn_impl="xla"):
-    """Returns (x, aux_loss)."""
+def moe_block(cfg, p, x, *, positions=None, q_chunk=0, sh=None, attn_impl="xla", fp8=None):
+    """Returns (x, aux_loss).  ``fp8`` quantizes attention projections (+ the
+    dense-residual FFN); routed expert FFNs stay in compute dtype."""
     h = apply_norm(cfg, p["norm1"], x)
-    a = self_attention(cfg, p["attn"], h, positions=positions, q_chunk=q_chunk, sh=sh, impl=attn_impl)
+    a = self_attention(
+        cfg, p["attn"], h, positions=positions, q_chunk=q_chunk, sh=sh, impl=attn_impl, fp8=fp8
+    )
     x = x + a
     h2 = apply_norm(cfg, p["norm2"], x)
     mo, aux = moe_ffn(cfg, p["moe"], h2, sh=sh)
     if cfg.moe.dense_residual:
         # Arctic: dense FFN in parallel with the routed experts
-        mo = mo + ffn(cfg, p["dense_mlp"], apply_norm(cfg, p["norm_dense"], x), sh=sh)
+        mo = mo + ffn(cfg, p["dense_mlp"], apply_norm(cfg, p["norm_dense"], x), sh=sh, fp8=fp8)
     x = x + mo
     if sh is not None:
         x = sh(x, ("batch", "seq", "embed"))
@@ -215,12 +220,14 @@ def _hybrid_combine(p, a, m, dtype):
     return 0.5 * (p["beta_attn"].astype(dtype) * _rmsn(a) + p["beta_ssm"].astype(dtype) * _rmsn(m))
 
 
-def hybrid_block(cfg, p, x, *, positions=None, q_chunk=0, sh=None, attn_impl="xla"):
+def hybrid_block(cfg, p, x, *, positions=None, q_chunk=0, sh=None, attn_impl="xla", fp8=None):
     h = apply_norm(cfg, p["norm1"], x)
-    a = self_attention(cfg, p["attn"], h, positions=positions, q_chunk=q_chunk, sh=sh, impl=attn_impl)
+    a = self_attention(
+        cfg, p["attn"], h, positions=positions, q_chunk=q_chunk, sh=sh, impl=attn_impl, fp8=fp8
+    )
     m, _states = ssm_mod.ssm_mix(cfg, p["ssm"], h, sh=sh)
     x = x + _hybrid_combine(p, a, m, x.dtype)
-    x = x + ffn(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x), sh=sh)
+    x = x + ffn(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x), sh=sh, fp8=fp8)
     if sh is not None:
         x = sh(x, ("batch", "seq", "embed"))
     return x

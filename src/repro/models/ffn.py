@@ -36,19 +36,30 @@ def ffn_specs(cfg, d_ff: int | None = None) -> dict:
     return specs
 
 
-def ffn(cfg, p: dict, x: jax.Array, *, sh=None) -> jax.Array:
+def ffn(cfg, p: dict, x: jax.Array, *, sh=None, fp8=None) -> jax.Array:
+    """``fp8``: an ``repro.fp8.Fp8Ctx`` — routes the up/gate/down GEMMs
+    through quantized matmuls (biases/activation stay in compute dtype)."""
     act = gate_fn(cfg.activation)
-    up = x @ p["w_up"].astype(x.dtype)
+    if fp8 is not None:
+        up = fp8.matmul("ffn_up", x, p["w_up"])
+    else:
+        up = x @ p["w_up"].astype(x.dtype)
     if cfg.use_bias:
         up = up + p["b_up"].astype(x.dtype)
     if is_gated(cfg.activation):
-        gate = act(x @ p["w_gate"].astype(x.dtype))
+        if fp8 is not None:
+            gate = act(fp8.matmul("ffn_gate", x, p["w_gate"]))
+        else:
+            gate = act(x @ p["w_gate"].astype(x.dtype))
         h = gate * up
     else:
         h = act(up)
     if sh is not None:
         h = sh(h, ("batch", "seq", "mlp"))
-    out = h @ p["w_down"].astype(x.dtype)
+    if fp8 is not None:
+        out = fp8.matmul("ffn_down", h, p["w_down"])
+    else:
+        out = h @ p["w_down"].astype(x.dtype)
     if cfg.use_bias:
         out = out + p["b_down"].astype(x.dtype)
     return out

@@ -100,9 +100,17 @@ def lm_logits(cfg, params, x, *, logits_dtype=jnp.float32, sh=None):
 # ---------------------------------------------------------------------------
 
 
-def _train_body(cfg, *, positions, q_chunk, sh, attn_impl, vision_tokens=None):
+def _train_body(cfg, *, positions, q_chunk, sh, attn_impl, vision_tokens=None, fp8=None):
     fam = cfg.family
     kw = dict(positions=positions, q_chunk=q_chunk, sh=sh, attn_impl=attn_impl)
+    if fp8 is not None:
+        from repro.fp8 import fp8_supported
+
+        if not fp8_supported(cfg):
+            # ssm has no quantizable projections; vlm scans layer *groups*
+            # (amax drain across the nested scan is not wired)
+            raise ValueError(f"fp8 training is not supported for family={fam}")
+        kw["fp8"] = fp8
 
     if fam in ("dense", "audio"):
 
@@ -140,16 +148,34 @@ def _train_body(cfg, *, positions, q_chunk, sh, attn_impl, vision_tokens=None):
 
     else:
         raise ValueError(fam)
-    return body
+    if fp8 is None:
+        return body
+
+    def body_fp8(carry, xs):
+        # bind this layer's scale slice, run the family body, then emit the
+        # layer's observed amaxes as a scan output (drain inside the body:
+        # observations are tracers of THIS scan/remat trace and must not
+        # escape it; per-layer ys keep one delayed scale per tensor)
+        p_layer, scales = xs
+        fp8.bind_layer_scales(scales)
+        carry, _ = body(carry, p_layer)
+        return carry, fp8.drain()
+
+    return body_fp8
 
 
-def forward(cfg, params, batch, *, sh=None, q_chunk=0, remat="none", attn_impl="xla", compute_dtype=None):
-    """Training forward. Returns (logits, aux_loss).
+def forward(
+    cfg, params, batch, *, sh=None, q_chunk=0, remat="none", attn_impl="xla", compute_dtype=None, fp8=None
+):
+    """Training forward. Returns (logits, aux_loss), or (logits, aux_loss,
+    amaxes) when an ``fp8`` context is passed (see ``repro.fp8.policy``).
 
     ``compute_dtype``: cast the activation stream (not the master weights) —
     every weight use casts its own layer slice via ``.astype(x.dtype)``, which
     keeps the stacked fp32 params (and their gradients) on the FSDP sharding
     through the layer scan instead of materializing an unsharded bf16 tree.
+    (FP8 sites instead quantize the fp32 slice directly — same sharding
+    property, 1-byte wire format.)
     """
     x, positions = embed_input(cfg, params, batch, sh=sh)
     if compute_dtype is not None:
@@ -158,12 +184,25 @@ def forward(cfg, params, batch, *, sh=None, q_chunk=0, remat="none", attn_impl="
     if vision_tokens is not None and compute_dtype is not None:
         vision_tokens = vision_tokens.astype(compute_dtype)
     body = _train_body(
-        cfg, positions=positions, q_chunk=q_chunk, sh=sh, attn_impl=attn_impl, vision_tokens=vision_tokens
+        cfg,
+        positions=positions,
+        q_chunk=q_chunk,
+        sh=sh,
+        attn_impl=attn_impl,
+        vision_tokens=vision_tokens,
+        fp8=fp8,
     )
     body = _maybe_remat(body, remat)
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    aux0 = jnp.zeros((), jnp.float32)
+    if fp8 is None:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+        logits = lm_logits(cfg, params, x, sh=sh)
+        return logits, aux / cfg.num_layers
+    # scan the per-layer scale slices alongside the stacked params; the ys
+    # are each layer's observed amaxes -> dict site-key -> (num_layers,)
+    (x, aux), amaxes = jax.lax.scan(body, (x, aux0), (params["blocks"], fp8.layer_scales()))
     logits = lm_logits(cfg, params, x, sh=sh)
-    return logits, aux / cfg.num_layers
+    return logits, aux / cfg.num_layers, amaxes
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,11 @@ Mixed precision follows the standard recipe: master params in
 ``precision.param_dtype`` (fp32), cast once to ``compute_dtype`` (bf16) at
 step entry — under FSDP the all-gather then moves bf16, halving wire bytes —
 softmax/norm statistics in fp32, logits in fp32.
+
+With ``precision.fp8`` enabled, the FFN / attention-projection GEMMs run
+through ``repro.fp8`` (e4m3 forward, e5m2 grads, delayed scaling): the step
+carries an ``Fp8State`` in ``TrainState``, the forward reports per-site amax
+observations, and the step folds them into the next step's scales.
 """
 
 from __future__ import annotations
@@ -26,6 +31,7 @@ class TrainState(NamedTuple):
     params: Any
     opt: AdamWState
     compress_residual: Any  # None unless grad_compression enabled
+    fp8: Any = None  # Fp8State unless precision.fp8 disabled/unsupported
 
 
 DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
@@ -57,8 +63,11 @@ def loss_fn(
     z_loss=0.0,
     attn_impl="xla",
     compute_dtype=None,
+    fp8=None,
 ):
-    logits, aux = forward(
+    """With an ``fp8`` context the aux grows a third slot: the per-site amax
+    observations the step needs for the delayed-scaling update."""
+    out = forward(
         model_cfg,
         params,
         batch,
@@ -67,9 +76,21 @@ def loss_fn(
         remat=remat,
         attn_impl=attn_impl,
         compute_dtype=compute_dtype,
+        fp8=fp8,
     )
+    if fp8 is None:
+        logits, aux = out
+        ce = cross_entropy(logits, batch["labels"], z_loss=z_loss)
+        return ce + aux, (ce, aux)
+    logits, aux, amaxes = out
     ce = cross_entropy(logits, batch["labels"], z_loss=z_loss)
-    return ce + aux, (ce, aux)
+    return ce + aux, (ce, aux, amaxes)
+
+
+def _fp8_enabled(model_cfg, prec) -> bool:
+    from repro.fp8 import fp8_supported
+
+    return bool(prec.fp8) and fp8_supported(model_cfg)
 
 
 def init_train_state(model_cfg, run_cfg, key) -> TrainState:
@@ -79,7 +100,12 @@ def init_train_state(model_cfg, run_cfg, key) -> TrainState:
     params = init_params(model_cfg, key, DTYPES[prec.param_dtype])
     opt = adamw_init(params, dtype=DTYPES[prec.optimizer_dtype])
     residual = init_compression_state(params, run_cfg.parallel.grad_compression)
-    return TrainState(params=params, opt=opt, compress_residual=residual)
+    fp8 = None
+    if _fp8_enabled(model_cfg, prec):
+        from repro.fp8 import make_fp8_state
+
+        fp8 = make_fp8_state(model_cfg, prec)
+    return TrainState(params=params, opt=opt, compress_residual=residual, fp8=fp8)
 
 
 def abstract_train_state(model_cfg, run_cfg) -> TrainState:
@@ -94,7 +120,13 @@ def abstract_train_state(model_cfg, run_cfg) -> TrainState:
     residual = None
     if run_cfg.parallel.grad_compression != "none":
         residual = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
-    return TrainState(params=params, opt=opt, compress_residual=residual)
+    fp8 = None
+    if _fp8_enabled(model_cfg, prec):
+        from repro.fp8 import make_fp8_state
+
+        # eval_shape: structs only, no device allocation (dry-run contract)
+        fp8 = jax.eval_shape(lambda: make_fp8_state(model_cfg, prec))
+    return TrainState(params=params, opt=opt, compress_residual=residual, fp8=fp8)
 
 
 def state_shardings(model_cfg, run_cfg, rules, mesh, abstract_state: TrainState):
@@ -105,7 +137,9 @@ def state_shardings(model_cfg, run_cfg, rules, mesh, abstract_state: TrainState)
     step_sh = NamedSharding(mesh, P())
     opt_sh = AdamWState(step=step_sh, m=p_sh, v=p_sh)
     res_sh = None if abstract_state.compress_residual is None else p_sh
-    return TrainState(params=p_sh, opt=opt_sh, compress_residual=res_sh)
+    # fp8 scales/amax windows are O(sites) scalars — replicate everywhere
+    fp8_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), abstract_state.fp8)
+    return TrainState(params=p_sh, opt=opt_sh, compress_residual=res_sh, fp8=fp8_sh)
 
 
 def make_train_step(model_cfg, run_cfg, rules=None, mesh=None, *, q_chunk=0, param_shardings=None):
@@ -125,51 +159,73 @@ def make_train_step(model_cfg, run_cfg, rules=None, mesh=None, *, q_chunk=0, par
     schedule = make_schedule(
         "cosine", base_lr=tr.learning_rate, warmup_steps=tr.warmup_steps, total_steps=tr.total_steps
     )
+    use_fp8 = _fp8_enabled(model_cfg, prec)
+    if use_fp8:
+        from repro.fp8 import make_fp8_ctx
 
-    def batch_loss(params, batch):
-        # NOTE: no whole-tree pre-cast — each weight use casts its own layer
-        # slice inside the scan body (see forward's compute_dtype docstring),
-        # so stacked params AND their grads stay FSDP-sharded through the
-        # loop.  A hoisted bf16 tree costs ~33 GB/device on llama-90b.
-        return loss_fn(
-            model_cfg,
-            params,
-            batch,
-            sh=sh,
-            q_chunk=q_chunk,
-            remat=par.remat,
-            z_loss=tr.z_loss,
-            compute_dtype=compute_dtype,
-        )
+    def make_loss(fp8_state):
+        def batch_loss(params, batch):
+            # NOTE: no whole-tree pre-cast — each weight use casts its own layer
+            # slice inside the scan body (see forward's compute_dtype docstring),
+            # so stacked params AND their grads stay FSDP-sharded through the
+            # loop.  A hoisted bf16 tree costs ~33 GB/device on llama-90b.
+            # A fresh Fp8Ctx per trace: its amax observations are trace-local.
+            fp8 = make_fp8_ctx(model_cfg, prec, fp8_state) if use_fp8 else None
+            l, aux = loss_fn(
+                model_cfg,
+                params,
+                batch,
+                sh=sh,
+                q_chunk=q_chunk,
+                remat=par.remat,
+                z_loss=tr.z_loss,
+                compute_dtype=compute_dtype,
+                fp8=fp8,
+            )
+            if not use_fp8:
+                aux = aux + (None,)  # uniform (ce, aux_loss, amaxes) shape
+            return l, aux
 
-    grad_fn = jax.value_and_grad(batch_loss, has_aux=True)
+        return batch_loss
 
     def step(state: TrainState, batch):
+        grad_fn = jax.value_and_grad(make_loss(state.fp8), has_aux=True)
         nmb = par.num_microbatches
         if nmb > 1:
 
             def micro(carry, mb):
-                g_acc, l_acc, a_acc = carry
-                (l, (ce, aux)), g = grad_fn(state.params, mb)
+                g_acc, l_acc, a_acc, am_acc = carry
+                (l, (ce, aux, am)), g = grad_fn(state.params, mb)
                 # keep the fp32 accumulator on the FSDP sharding
                 if param_shardings is not None:
                     g = jax.tree.map(
                         lambda x, s: jax.lax.with_sharding_constraint(x, s), g, param_shardings
                     )
                 g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                return (g_acc, l_acc + ce, a_acc + aux), None
+                am_acc = jax.tree.map(jnp.maximum, am_acc, am)  # both None when fp8 off
+                return (g_acc, l_acc + ce, a_acc + aux, am_acc), None
 
             mb_batch = jax.tree.map(
                 lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]), batch
             )
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
-            (grads, ce, aux), _ = jax.lax.scan(
-                micro, (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), mb_batch
+            am0 = jax.tree.map(jnp.zeros_like, state.fp8.scale) if use_fp8 else None
+            (grads, ce, aux, amaxes), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32), am0), mb_batch
             )
             grads = jax.tree.map(lambda g: g / nmb, grads)
             ce, aux = ce / nmb, aux / nmb
         else:
-            (_, (ce, aux)), grads = grad_fn(state.params, batch)
+            (_, (ce, aux, amaxes)), grads = grad_fn(state.params, batch)
+
+        new_fp8 = state.fp8
+        if use_fp8:
+            from repro.fp8 import update_fp8_state
+            from repro.fp8.quantize import FP8_DTYPES
+
+            new_fp8 = update_fp8_state(
+                state.fp8, amaxes, dtype=FP8_DTYPES[prec.fp8_dtype], margin=prec.fp8_margin
+            )
 
         residual = state.compress_residual
         if par.grad_compression != "none":
@@ -189,6 +245,9 @@ def make_train_step(model_cfg, run_cfg, rules=None, mesh=None, *, q_chunk=0, par
             layer_scan=par.optimizer_layer_scan,
         )
         metrics = {"loss": ce, "aux_loss": aux, "lr": lr, **om}
-        return TrainState(params=new_params, opt=new_opt, compress_residual=residual), metrics
+        return (
+            TrainState(params=new_params, opt=new_opt, compress_residual=residual, fp8=new_fp8),
+            metrics,
+        )
 
     return step

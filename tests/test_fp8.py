@@ -1,0 +1,241 @@
+"""FP8 quantized training: round-trip bounds, delayed scaling, GEMM kernel
+vs oracle, gradient fidelity, and end-to-end train-step parity vs bf16."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ParallelConfig, RunConfig, TrainConfig
+from repro.config.model import reduce_for_smoke
+from repro.config.run import PrecisionConfig
+from repro.configs import get_config
+from repro.fp8 import (
+    E4M3,
+    E5M2,
+    FP8_MAX,
+    compute_scale,
+    dequantize,
+    fp8_dot,
+    fp8_gemm,
+    fp8_gemm_ref,
+    fp8_sites,
+    fp8_supported,
+    init_fp8_state,
+    quantize,
+    scale_keys,
+    tensor_amax,
+    update_fp8_state,
+)
+from repro.train.step import init_train_state, make_train_step
+
+
+def _amax_scale(x, dtype):
+    return compute_scale(tensor_amax(x), dtype)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,mantissa_bits", [(E4M3, 3), (E5M2, 2)])
+def test_round_trip_error_bound(dtype, mantissa_bits):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096,), jnp.float32)
+    s = _amax_scale(x, dtype)
+    xd = dequantize(quantize(x, s, dtype), s)
+    # relative-to-amax error: one rounding step at the top binade is
+    # amax * 2^-(mantissa+1); everything below rounds at least as finely
+    amax = float(jnp.max(jnp.abs(x)))
+    bound = amax * 2.0 ** -(mantissa_bits + 1) * 1.001
+    assert float(jnp.max(jnp.abs(x - xd))) <= bound
+
+
+def test_e4m3_beats_e5m2_precision():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096,), jnp.float32)
+    errs = {}
+    for dt in (E4M3, E5M2):
+        s = _amax_scale(x, dt)
+        errs[dt] = float(jnp.mean(jnp.abs(x - dequantize(quantize(x, s, dt), s))))
+    assert errs[E4M3] < errs[E5M2]
+
+
+def test_exact_values_round_trip_exactly():
+    x = jnp.array([1.0, 1.5, -2.0, 0.25, 448.0, 0.0], jnp.float32)
+    one = jnp.float32(1.0)
+    np.testing.assert_array_equal(np.asarray(dequantize(quantize(x, one, E4M3), one)), np.asarray(x))
+
+
+def test_saturating_cast_no_nan():
+    # jax's astype(f8) maps overflow to NaN; our quantize must clip instead
+    x = jnp.array([1e6, -1e6, 700.0], jnp.float32)
+    q = quantize(x, jnp.float32(1.0), E4M3)
+    d = np.asarray(dequantize(q, jnp.float32(1.0)))
+    assert np.all(np.isfinite(d))
+    np.testing.assert_array_equal(d, [448.0, -448.0, 448.0])
+
+
+# ---------------------------------------------------------------------------
+# delayed scaling
+# ---------------------------------------------------------------------------
+
+
+def test_delayed_scaling_window_semantics():
+    st = init_fp8_state(["s/x"], window=4)
+    assert float(st.scale["s/x"][0]) == 1.0  # first step quantizes at unit scale
+    for a in [1.0, 2.0, 3.0, 4.0, 5.0]:
+        st = update_fp8_state(st, {"s/x": jnp.float32(a)}, dtype=E4M3)
+    np.testing.assert_allclose(np.asarray(st.amax_history["s/x"])[0], [5.0, 4.0, 3.0, 2.0])
+    np.testing.assert_allclose(float(st.scale["s/x"][0]), FP8_MAX[E4M3] / 5.0, rtol=1e-6)
+    assert int(st.step) == 5
+    # the old peak ages out of the window: scale recovers toward the recent amax
+    for _ in range(4):
+        st = update_fp8_state(st, {"s/x": jnp.float32(0.5)}, dtype=E4M3)
+    np.testing.assert_allclose(float(st.scale["s/x"][0]), FP8_MAX[E4M3] / 0.5, rtol=1e-6)
+
+
+def test_delayed_scaling_is_per_layer():
+    # per-tensor scaling: each layer's row rolls/scales independently
+    st = init_fp8_state(["s/x"], window=2, num_layers=3)
+    st = update_fp8_state(st, {"s/x": jnp.array([1.0, 10.0, 100.0], jnp.float32)}, dtype=E4M3)
+    np.testing.assert_allclose(
+        np.asarray(st.scale["s/x"]), FP8_MAX[E4M3] / np.array([1.0, 10.0, 100.0]), rtol=1e-6
+    )
+
+
+def test_margin_halves_scale_per_unit():
+    s0 = compute_scale(jnp.float32(2.0), E4M3, margin=0.0)
+    s1 = compute_scale(jnp.float32(2.0), E4M3, margin=1.0)
+    np.testing.assert_allclose(float(s0), 2.0 * float(s1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# GEMM: Pallas kernel vs jnp oracle, and FP8 path vs exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 512), (100, 70, 36)])
+def test_pallas_gemm_matches_ref(shape):
+    M, K, N = shape
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    sa, sb = _amax_scale(a, E4M3), _amax_scale(b, E4M3)
+    qa, qb = quantize(a, sa, E4M3), quantize(b, sb, E4M3)
+    ref = fp8_gemm_ref(qa, qb, sa, sb)
+    pal = fp8_gemm(qa, qb, sa, sb)  # interpret mode on CPU
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_fp8_gemm_within_quantization_tolerance_of_exact():
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 128), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 192), jnp.float32)
+    sa, sb = _amax_scale(a, E4M3), _amax_scale(b, E4M3)
+    out = fp8_gemm(quantize(a, sa, E4M3), quantize(b, sb, E4M3), sa, sb)
+    exact = a @ b
+    rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.06  # per-element e4m3 noise averages to a few % in the dot
+
+
+def test_fp8_dot_gradients_close_to_exact():
+    from repro.fp8.gemm_ref import fp8_gemm_ref as gemm
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 48), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 32), jnp.float32)
+    sx, sw = _amax_scale(x, E4M3), _amax_scale(w, E4M3)
+
+    gx, gw = jax.grad(lambda x, w: jnp.sum(fp8_dot(x, w, sx, sw, E4M3, gemm) ** 2), (0, 1))(x, w)
+    egx, egw = jax.grad(lambda x, w: jnp.sum((x @ w) ** 2), (0, 1))(x, w)
+    for g, eg in ((gx, egx), (gw, egw)):
+        rel = float(jnp.linalg.norm(g - eg) / jnp.linalg.norm(eg))
+        assert rel < 0.15  # e5m2 backward quantization noise
+
+
+# ---------------------------------------------------------------------------
+# policy / sites
+# ---------------------------------------------------------------------------
+
+
+def test_policy_sites():
+    dense = reduce_for_smoke(get_config("olmo-1b"))
+    assert fp8_supported(dense)
+    sites = fp8_sites(dense)
+    assert {"attn_q", "attn_k", "attn_v", "attn_o", "ffn_up", "ffn_gate", "ffn_down"} == set(sites)
+    assert len(scale_keys(dense)) == 2 * len(sites)
+    # routed-expert MoE without dense residual: attention only
+    moe = reduce_for_smoke(get_config("qwen3-moe-235b-a22b"))
+    assert set(fp8_sites(moe)) == {"attn_q", "attn_k", "attn_v", "attn_o"}
+    # ssm/vlm: no fp8 path
+    assert not fp8_supported(reduce_for_smoke(get_config("rwkv6-7b")))
+    assert not fp8_supported(reduce_for_smoke(get_config("llama-3.2-vision-90b")))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end train step
+# ---------------------------------------------------------------------------
+
+
+def _batch(cfg, key, B=4, S=32):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+
+
+def _run_cfg(arch, fp8, nmb=1):
+    return RunConfig(
+        arch=arch,
+        train=TrainConfig(global_batch=4, seq_len=32),
+        parallel=ParallelConfig(remat="full", num_microbatches=nmb),
+        precision=PrecisionConfig(fp8=fp8),
+    )
+
+
+def test_train_step_fp8_loss_parity_and_amax_update():
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    losses = {}
+    for fp8 in (False, True):
+        run = _run_cfg("olmo-1b", fp8)
+        state = init_train_state(cfg, run, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, run))
+        ls = []
+        for s in range(3):
+            state, m = step(state, _batch(cfg, jax.random.PRNGKey(s)))
+            ls.append(float(m["loss"]))
+        losses[fp8] = ls
+        if fp8:
+            assert int(state.fp8.step) == 3
+            # every site x layer observed a nonzero amax each step (newest
+            # first); history leaves are (num_layers, window)
+            for k, h in state.fp8.amax_history.items():
+                assert np.asarray(h).shape == (cfg.num_layers, 16), k
+                assert np.all(np.asarray(h)[:, :3] > 0), k
+            # scales actually moved off the init value
+            assert any(
+                np.any(np.abs(np.asarray(s) - 1.0) > 1e-3) for s in state.fp8.scale.values()
+            )
+    for a, b in zip(losses[False], losses[True]):
+        assert np.isfinite(b)
+        assert abs(a - b) / abs(a) < 0.02  # quantization-level deviation only
+
+    # bf16 runs carry no fp8 state
+    run = _run_cfg("olmo-1b", False)
+    assert init_train_state(cfg, run, jax.random.PRNGKey(0)).fp8 is None
+
+
+def test_train_step_fp8_microbatched():
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    run = _run_cfg("olmo-1b", True, nmb=2)
+    state = init_train_state(cfg, run, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, run))
+    state, m = step(state, _batch(cfg, jax.random.PRNGKey(0)))
+    assert np.isfinite(float(m["loss"]))
+    assert int(state.fp8.step) == 1
+    assert all(np.all(np.asarray(h)[:, 0] > 0) for h in state.fp8.amax_history.values())
+
+
+def test_train_step_fp8_unsupported_family_falls_back():
+    cfg = reduce_for_smoke(get_config("rwkv6-7b"))
+    run = _run_cfg("rwkv6-7b", True)
+    state = init_train_state(cfg, run, jax.random.PRNGKey(0))
+    assert state.fp8 is None
+    step = jax.jit(make_train_step(cfg, run))
+    state, m = step(state, _batch(cfg, jax.random.PRNGKey(0)))
+    assert np.isfinite(float(m["loss"]))

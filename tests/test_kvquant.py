@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.config.model import reduce_for_smoke

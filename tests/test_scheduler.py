@@ -5,6 +5,7 @@ system invariants (no double-booking, guaranteed completion, bounded rollback).
 """
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

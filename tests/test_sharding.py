@@ -8,6 +8,7 @@ from dataclasses import dataclass
 
 import jax
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
