@@ -1,9 +1,12 @@
-"""llama.cpp-style LLM inference (paper Fig. 9).
+"""llama.cpp-style LLM inference (paper Fig. 9), paged vs dense engines.
 
 The paper reports 70B llama.cpp decode throughput on the Grace CPU.  This
-harness serves a reduced model through the continuous-batching engine
-(measured tokens/s on CPU) and derives the full mistral-nemo-12b decode-step
-roofline time on a v5e pod from the dry-run artifacts (HBM-bound KV reads).
+harness serves a reduced model through the continuous-batching engine —
+once with the slot-granular dense cache and once with the paged block-pool
+cache at the **same cache-byte budget** — and reports decode tokens/s,
+blocks in use, and the achievable concurrent requests under each layout.
+The full-size mistral-nemo-12b decode-step roofline (HBM-bound KV reads) is
+derived from the dry-run artifacts when present.
 """
 
 from __future__ import annotations
@@ -22,24 +25,68 @@ from repro.serving import InferenceEngine
 
 RESULTS = Path(__file__).resolve().parent / "results" / "dryrun_single.json"
 
+MAX_SEQ = 128
+DENSE_BATCH = 4
+BLOCK_SIZE = 16
+N_REQUESTS = 16
+MAX_NEW = 12
+
+
+def _drive(eng) -> dict:
+    for i in range(N_REQUESTS):
+        eng.submit([1 + i, 2, 3, 4], max_new_tokens=MAX_NEW, online=i % 2 == 0)
+    t0 = time.perf_counter()
+    eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    s = eng.stats()
+    s["wall_s"] = dt
+    s["tok_per_s"] = s["tokens_out"] / dt
+    return s
+
 
 def run() -> list[dict]:
     cfg = reduce_for_smoke(get_config("mistral-nemo-12b"))
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    eng = InferenceEngine(cfg, params, max_batch=4, max_seq=128)
-    for i in range(8):
-        eng.submit([1 + i, 2, 3, 4], max_new_tokens=16, online=i % 2 == 0)
-    t0 = time.perf_counter()
-    eng.run_until_drained()
-    dt = time.perf_counter() - t0
-    stats = eng.stats()
+
+    dense = InferenceEngine(
+        cfg, params, max_batch=DENSE_BATCH, max_seq=MAX_SEQ, cache_kind="dense"
+    )
+    ds = _drive(dense)
+
+    # paged engine at the dense byte budget: same number of cache positions
+    # (null block included), sliced into blocks, slots decoupled from max_seq
+    num_blocks = DENSE_BATCH * MAX_SEQ // BLOCK_SIZE
+    paged = InferenceEngine(
+        cfg,
+        params,
+        max_batch=N_REQUESTS,
+        max_seq=MAX_SEQ,
+        cache_kind="paged",
+        block_size=BLOCK_SIZE,
+        num_blocks=num_blocks,
+    )
+    ps = _drive(paged)
+
     rows = [
         {
-            "name": "llm_inference_engine_cpu",
-            "us_per_call": dt / max(stats["decode_steps"], 1) * 1e6,
-            "derived": f"tokens_out={stats['tokens_out']} tok/s={stats['tokens_out']/dt:.1f}",
-        }
+            "name": "llm_inference_dense_cpu",
+            "us_per_call": ds["wall_s"] / max(ds["decode_steps"], 1) * 1e6,
+            "derived": (
+                f"tok/s={ds['tok_per_s']:.1f} peak_concurrent={ds['peak_active']} "
+                f"cache_bytes={ds['cache_bytes']}"
+            ),
+        },
+        {
+            "name": "llm_inference_paged_cpu",
+            "us_per_call": ps["wall_s"] / max(ps["decode_steps"], 1) * 1e6,
+            "derived": (
+                f"tok/s={ps['tok_per_s']:.1f} peak_concurrent={ps['peak_active']} "
+                f"cache_bytes={ps['cache_bytes']} peak_blocks={ps['alloc_peak_in_use']}"
+                f"/{ps['alloc_capacity']}"
+            ),
+        },
     ]
+    assert ps["cache_bytes"] <= ds["cache_bytes"], "paged budget drifted above dense"
     # derived decode-step time for the full 12B model from the dry-run
     if RESULTS.exists():
         rec = json.loads(RESULTS.read_text()).get("mistral-nemo-12b|decode_32k")

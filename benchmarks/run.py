@@ -1,10 +1,11 @@
 """Benchmark harness: one module per paper figure, CSV output.
 
     Fig. 8  -> mlperf_train     (BERT-Large training)
-    Fig. 9  -> llm_inference    (llama.cpp-style decode throughput)
+    Fig. 9  -> llm_inference    (paged vs dense continuous-batching decode)
     Fig. 10 -> babelstream      (memory bandwidth, Pallas kernels)
     Fig. 11 -> cloverleaf       (stencil weak scaling, shard_map halos)
     §1      -> fp8_gemm         (bf16 vs FP8-path GEMM, 8-bit peak headline)
+    §IV.F   -> paged_attention  (block-table decode kernel vs gather oracle)
 
 Each prints ``name,us_per_call,derived`` rows.  On this CPU image the
 wall-clock columns are CPU-measured (reduced configs / interpret mode); the
@@ -18,11 +19,18 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import babelstream, cloverleaf, fp8_gemm, llm_inference, mlperf_train
+    from benchmarks import (
+        babelstream,
+        cloverleaf,
+        fp8_gemm,
+        llm_inference,
+        mlperf_train,
+        paged_attention,
+    )
 
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (mlperf_train, llm_inference, babelstream, cloverleaf, fp8_gemm):
+    for mod in (mlperf_train, llm_inference, babelstream, cloverleaf, fp8_gemm, paged_attention):
         try:
             for r in mod.run():
                 derived = r.get("derived") or f"modeled_v5e_us={r.get('modeled_tpu_us', r.get('modeled_v5e_us', 0)):.1f}"

@@ -30,7 +30,8 @@ def main() -> None:
     eng.run_until_drained()
     for r in reqs:
         kind = "online " if r.online else "offline"
-        print(f"req {r.req_id:2d} [{kind}] ttft={r.ttft*1e3:7.1f}ms  tokens={r.generated[:8]}...")
+        ttft = f"{r.ttft*1e3:7.1f}ms" if r.ttft is not None else "  never admitted"
+        print(f"req {r.req_id:2d} [{kind}] ttft={ttft}  tokens={r.generated[:8]}...")
     print("engine stats:", eng.stats())
 
 

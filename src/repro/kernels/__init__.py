@@ -7,7 +7,7 @@ image everything runs through ``interpret=True``.
 """
 
 from repro.fp8.gemm import fp8_gemm
-from repro.kernels import flash_attention_ops
+from repro.kernels import flash_attention_ops, paged_attention_ops
 from repro.kernels.babelstream import (
     stream_add,
     stream_bytes,
@@ -17,12 +17,16 @@ from repro.kernels.babelstream import (
     stream_triad,
 )
 from repro.kernels.flash_attention_ops import flash_attention
+from repro.kernels.paged_attention_ops import paged_attention, paged_attention_quantized
 from repro.kernels.rwkv6_scan_ops import wkv6
 
 __all__ = [
     "flash_attention",
     "flash_attention_ops",
     "fp8_gemm",
+    "paged_attention",
+    "paged_attention_ops",
+    "paged_attention_quantized",
     "stream_add",
     "stream_bytes",
     "stream_copy",

@@ -1,0 +1,142 @@
+"""Paged-attention decode — Pallas TPU kernel (block-table gather, online softmax).
+
+vLLM-style decode attention over a paged KV cache: each sequence's K/V lives
+in non-contiguous fixed-size blocks of a global pool, addressed through a
+per-sequence block table.  The kernel never materializes the gathered
+(B, S, KV, hd) view — the block table is a *scalar-prefetch* operand
+(``pltpu.PrefetchScalarGridSpec``), so the BlockSpec index_map dereferences it
+to DMA exactly the physical block each grid step needs:
+
+    grid = (batch, kv_head, logical_block)
+    k/v spec: (1, block_size, 1, hd) @ (table[b, i], 0, kv, 0)
+
+The minormost grid dimension walks a sequence's logical blocks and *revisits*
+the output block, carrying the running max / denominator / fp32 accumulator
+in VMEM scratch between steps — the same grid-order online-softmax
+formulation as ``kernels/flash_attention.py``.
+
+Tile notes: the (block_size, hd) K/V tile should be 128-aligned on real TPUs
+(block_size a multiple of the sublane tile, hd = 128 lanes for the assigned
+archs); interpret mode (this CPU image) accepts the smoke sizes.  Sequences
+shorter than ``nb * block_size`` are handled by masking against ``seq_lens``;
+table entries past a sequence's last block must point at a valid (e.g. null)
+block — they are DMA'd and fully masked.  ``seq_lens`` must be >= 1 so the
+first logical block always contributes a finite row-max.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _paged_kernel(
+    tbl_ref,  # scalar-prefetch (B, nb) int32
+    len_ref,  # scalar-prefetch (B,) int32
+    q_ref,  # (1, 1, qpk, hd)
+    k_ref,  # (1, bs, 1, hd) — physical block picked by the index_map
+    v_ref,
+    o_ref,  # (1, 1, qpk, hd), revisited across the block dimension
+    acc_ref,  # VMEM (qpk, hd) fp32
+    m_ref,  # VMEM (qpk, 1) fp32
+    l_ref,  # VMEM (qpk, 1) fp32
+    *,
+    scale: float,
+    softcap: float,
+    window: int,
+    block_size: int,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (qpk, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (qpk, bs)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    seq_len = len_ref[b]
+    kv_pos = i * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = kv_pos < seq_len  # causal over everything written so far
+    if window > 0:
+        ok &= (seq_len - 1 - kv_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = (alpha * l_ref[:, 0] + jnp.sum(p, axis=1))[:, None]
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_cur[:, None]
+
+    @pl.when(i == nb - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attention_bhd(
+    q: jax.Array,  # (B, H, hd) current-token queries
+    k_pool: jax.Array,  # (N, bs, KV, hd) global block pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, nb) int32 physical block ids
+    seq_lens: jax.Array,  # (B,) int32 valid kv length (>= 1)
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, hd = q.shape
+    N, bs, KV, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    assert H % KV == 0, (H, KV)
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, KV, qpk, hd)
+    kernel = functools.partial(
+        _paged_kernel,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+        block_size=bs,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, qpk, hd), lambda b, kv, i, tbl, sl: (b, kv, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, kv, i, tbl, sl: (tbl[b, i], 0, kv, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, kv, i, tbl, sl: (tbl[b, i], 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpk, hd), lambda b, kv, i, tbl, sl: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qpk, hd), jnp.float32),
+            pltpu.VMEM((qpk, 1), jnp.float32),
+            pltpu.VMEM((qpk, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, qpk, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(B, H, hd)

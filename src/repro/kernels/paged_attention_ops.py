@@ -1,0 +1,72 @@
+"""Jit'd public wrapper for the paged-attention decode kernel.
+
+Routes fp pools through the Pallas kernel (interpret mode off-TPU); int8
+pools with per-(token, head) scales fall back to the dequantizing jnp
+reference — the int8 savings are an HBM-traffic property, and on this CPU
+image both paths are emulated anyway.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import paged_attention_bhd
+from repro.kernels.paged_attention_ref import paged_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("softcap", "window"))
+def paged_attention(
+    q: jax.Array,  # (B, H, hd) current-token queries
+    k_pool: jax.Array,  # (N, bs, KV, hd)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, nb) int32
+    seq_lens: jax.Array,  # (B,) int32, >= 1
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+) -> jax.Array:
+    if k_pool.dtype == jnp.int8:
+        raise ValueError("int8 pools need scales: use paged_attention_quantized")
+    return paged_attention_bhd(
+        q,
+        k_pool,
+        v_pool,
+        block_tables,
+        seq_lens,
+        softcap=softcap,
+        window=window,
+        interpret=not _on_tpu(),
+    )
+
+
+@partial(jax.jit, static_argnames=("softcap", "window"))
+def paged_attention_quantized(
+    q: jax.Array,
+    k_pool: jax.Array,  # int8 (N, bs, KV, hd)
+    v_pool: jax.Array,
+    k_scale: jax.Array,  # fp32 (N, bs, KV, 1)
+    v_scale: jax.Array,
+    block_tables: jax.Array,
+    seq_lens: jax.Array,
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+) -> jax.Array:
+    return paged_attention_ref(
+        q,
+        k_pool,
+        v_pool,
+        block_tables,
+        seq_lens,
+        softcap=softcap,
+        window=window,
+        k_scale=k_scale,
+        v_scale=v_scale,
+    )

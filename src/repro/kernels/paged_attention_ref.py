@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for paged-attention decode.
+
+Gathers the K/V blocks addressed by each sequence's block table into a
+contiguous (B, nb*bs, KV, hd) view and runs exact fp32 softmax attention for
+the single query token.  This is both the allclose reference for the Pallas
+kernel and the ``attn_impl="xla"`` decode path of the paged serving engine
+(at smoke scale the gather materialization is irrelevant; on TPU the Pallas
+kernel avoids it).
+
+Optionally consumes int8 block pools with per-(token, head) fp32 scales (the
+``serving.kvquant`` KIVI layout) — dequantization happens after the gather.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def gather_blocks(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """pool: (N, bs, ...) + tables (B, nb) -> (B, nb*bs, ...) logical view."""
+    B, nb = block_tables.shape
+    bs = pool.shape[1]
+    g = pool[block_tables]  # (B, nb, bs, ...)
+    return g.reshape((B, nb * bs) + pool.shape[2:])
+
+
+def paged_attention_ref(
+    q: jax.Array,  # (B, H, hd) current-token queries
+    k_pool: jax.Array,  # (N, bs, KV, hd) global block pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, nb) int32 physical block ids (0 = null)
+    seq_lens: jax.Array,  # (B,) int32 valid kv length (incl. current token)
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    k_scale: jax.Array | None = None,  # (N, bs, KV, 1) fp32 (int8 pools)
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Returns (B, H, hd) attention output in q.dtype."""
+    B, H, hd = q.shape
+    KV = k_pool.shape[2]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    k = gather_blocks(k_pool, block_tables).astype(jnp.float32)  # (B, S, KV, hd)
+    v = gather_blocks(v_pool, block_tables).astype(jnp.float32)
+    if k_scale is not None:
+        k = k * gather_blocks(k_scale, block_tables)
+    if v_scale is not None:
+        v = v * gather_blocks(v_scale, block_tables)
+    S = k.shape[1]
+
+    qg = q.astype(jnp.float32).reshape(B, KV, qpk, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k) * scale  # (B, KV, qpk, S)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    kv_pos = jnp.arange(S, dtype=jnp.int32)[None, :]  # logical positions
+    q_pos = (seq_lens - 1)[:, None]
+    ok = kv_pos < seq_lens[:, None]  # causal: everything written so far
+    if window > 0:
+        ok &= (q_pos - kv_pos) < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bkgs,bskd->bkgd", w, v)
+    return ctx.reshape(B, H, hd).astype(q.dtype)

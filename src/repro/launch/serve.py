@@ -1,10 +1,13 @@
 """Serving launcher: continuous-batching engine over a synthetic request mix.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mistral-nemo-12b \\
-        --requests 12 --max-batch 4
+        --requests 12 --max-batch 4 --cache paged --block-size 16
 
 Runs the paper's inference QoS class end-to-end: online requests admitted
-ahead of offline backfill, per-request TTFT, engine utilization stats.
+ahead of offline backfill, per-request TTFT, paged-pool block accounting and
+engine utilization stats.  ``--cache dense`` selects the slot-granular
+baseline; ``--quantize-kv`` stores paged pools int8 (KIVI scales);
+``--attn-impl pallas`` routes decode through the paged-attention kernel.
 """
 
 from __future__ import annotations
@@ -20,6 +23,8 @@ from repro.configs import ASSIGNED, get_config
 from repro.models import init_params
 from repro.serving import InferenceEngine
 
+DTYPES = {"bf16": jnp.bfloat16, "fp32": jnp.float32}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -28,25 +33,52 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache", default="paged", choices=("paged", "dense"))
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None)
+    ap.add_argument("--cache-dtype", default="bf16", choices=sorted(DTYPES))
+    ap.add_argument("--quantize-kv", action="store_true", help="int8 paged block pools")
+    ap.add_argument("--attn-impl", default="xla", choices=("xla", "pallas"))
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = reduce_for_smoke(get_config(args.arch))
     if cfg.is_encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only; no decode serving")
     params = init_params(cfg, jax.random.PRNGKey(args.seed), jnp.float32)
-    eng = InferenceEngine(cfg, params, max_batch=args.max_batch, max_seq=256, seed=args.seed)
+    eng = InferenceEngine(
+        cfg,
+        params,
+        max_batch=args.max_batch,
+        max_seq=256,
+        seed=args.seed,
+        cache_kind=args.cache,
+        block_size=args.block_size,
+        num_blocks=args.num_blocks,
+        cache_dtype=DTYPES[args.cache_dtype],
+        quantize_kv=args.quantize_kv,
+        attn_impl=args.attn_impl,
+    )
 
     rng = random.Random(args.seed)
     reqs = []
     for i in range(args.requests):
         prompt = [rng.randrange(2, cfg.vocab_size) for _ in range(rng.randint(2, 8))]
         reqs.append(
-            eng.submit(prompt, max_new_tokens=args.max_new, online=(i % 3 != 0), temperature=0.0)
+            eng.submit(
+                prompt,
+                max_new_tokens=args.max_new,
+                online=(i % 3 != 0),
+                temperature=args.temperature,
+                top_k=args.top_k,
+            )
         )
     eng.run_until_drained()
     for r in reqs:
         kind = "online " if r.online else "offline"
-        print(f"req {r.req_id:3d} [{kind}] ttft={r.ttft*1e3:8.1f}ms len={len(r.generated)} head={r.generated[:6]}")
+        ttft = f"{r.ttft*1e3:8.1f}ms" if r.ttft is not None else "   never admitted"
+        print(f"req {r.req_id:3d} [{kind}] ttft={ttft} len={len(r.generated)} head={r.generated[:6]}")
     print("[serve] stats:", eng.stats())
 
 

@@ -9,7 +9,10 @@ from repro.models.cache import (
     abstract_cache,
     cache_bytes,
     init_cache,
+    init_paged_cache,
+    paged_cache_bytes,
     stacked_cache_axes,
+    supports_paged,
 )
 
 __all__ = [
@@ -23,5 +26,8 @@ __all__ = [
     "abstract_cache",
     "cache_bytes",
     "init_cache",
+    "init_paged_cache",
+    "paged_cache_bytes",
     "stacked_cache_axes",
+    "supports_paged",
 ]

@@ -287,3 +287,98 @@ def decode_attention(
     m = jnp.where(new_cache_pos[:, None, :] < 0, NEG_INF, m)  # empty slots
     ctx = _attend_block(cfg, q, new_k, new_v, m[:, None, None], cfg.q_per_kv)
     return _out(cfg, p, ctx, x.dtype), new_k, new_v, new_cache_pos
+
+
+def paged_decode_attention(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    *,
+    impl: str = "xla",
+    sh=None,
+):
+    """Single-token decode against a paged (block-pooled) KV cache.
+
+    x:     (B, 1, D) current token embedding stream
+    cache: {"k","v": (N, bs, KV, hd) pools, "tbl": (B, nb) block table,
+            ["k_scale","v_scale": (N, bs, KV, 1) for int8 pools]}
+    pos:   (B,) absolute position of the current token.
+
+    The new K/V lands in block ``tbl[b, pos // bs]`` at offset ``pos % bs``.
+    Inactive batch slots carry all-null block tables, so their writes hit the
+    reserved null block, never a live request's memory.  Attention runs over
+    the logical view [0, pos] via the block table — ``impl="pallas"`` uses the
+    ``kernels.paged_attention`` gather kernel, ``impl="xla"`` the jnp oracle.
+
+    Returns (out, new_cache) with the same keys as ``cache``.
+    """
+    k_pool, v_pool, tbl = cache["k"], cache["v"], cache["tbl"]
+    B = x.shape[0]
+    bs = k_pool.shape[1]
+    quantized = k_pool.dtype == jnp.int8
+
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.rotary_pct > 0 and not cfg.learned_pos_embedding:
+        q = apply_rope(q, pos[:, None], rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+
+    b_idx = jnp.arange(B)
+    phys = tbl[b_idx, pos // bs]  # physical block holding this position
+    off = pos % bs
+    new_cache = dict(cache)
+    if quantized:
+        from repro.serving.kvquant import quantize
+
+        kq, ks = quantize(k[:, 0])
+        vq, vs = quantize(v[:, 0])
+        new_cache["k"] = k_pool.at[phys, off].set(kq)
+        new_cache["v"] = v_pool.at[phys, off].set(vq)
+        new_cache["k_scale"] = cache["k_scale"].at[phys, off].set(ks)
+        new_cache["v_scale"] = cache["v_scale"].at[phys, off].set(vs)
+    else:
+        new_cache["k"] = k_pool.at[phys, off].set(k[:, 0].astype(k_pool.dtype))
+        new_cache["v"] = v_pool.at[phys, off].set(v[:, 0].astype(v_pool.dtype))
+
+    seq_lens = pos + 1
+    if quantized:
+        from repro.kernels.paged_attention_ops import paged_attention_quantized
+
+        ctx = paged_attention_quantized(
+            q[:, 0],
+            new_cache["k"],
+            new_cache["v"],
+            new_cache["k_scale"],
+            new_cache["v_scale"],
+            tbl,
+            seq_lens,
+            softcap=cfg.attn_logit_softcap,
+            window=cfg.sliding_window,
+        )
+    elif impl == "pallas":
+        from repro.kernels.paged_attention_ops import paged_attention
+
+        ctx = paged_attention(
+            q[:, 0],
+            new_cache["k"],
+            new_cache["v"],
+            tbl,
+            seq_lens,
+            softcap=cfg.attn_logit_softcap,
+            window=cfg.sliding_window,
+        )
+    else:
+        from repro.kernels.paged_attention_ref import paged_attention_ref
+
+        ctx = paged_attention_ref(
+            q[:, 0],
+            new_cache["k"],
+            new_cache["v"],
+            tbl,
+            seq_lens,
+            softcap=cfg.attn_logit_softcap,
+            window=cfg.sliding_window,
+        )
+    out = _out(cfg, p, ctx[:, None], x.dtype)
+    return out, new_cache

@@ -21,6 +21,7 @@ from repro.models.attention import (
     attention_specs,
     cross_attention,
     decode_attention,
+    paged_decode_attention,
     prefill_attention,
     self_attention,
 )
@@ -32,6 +33,20 @@ from repro.models.moe import moe_ffn, moe_specs
 def _rmsn(x, eps=1e-5):
     xf = x.astype(jnp.float32)
     return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)).astype(x.dtype)
+
+
+def _decode_attn(cfg, p_attn, h, cache, pos, *, sh=None, attn_impl="xla"):
+    """Decode attention against either cache layout.
+
+    Paged caches (block pools + ``tbl`` block tables) and dense slot caches
+    share the block decode path — the cache tree's keys select the layout, so
+    ``decode_step``'s layer scan is layout-agnostic.  Returns (out, new
+    attention-cache entries).
+    """
+    if "tbl" in cache:
+        return paged_decode_attention(cfg, p_attn, h, cache, pos, impl=attn_impl, sh=sh)
+    a, nk, nv, npos = decode_attention(cfg, p_attn, h, cache["k"], cache["v"], cache["pos"], pos, sh=sh)
+    return a, {"k": nk, "v": nv, "pos": npos}
 
 
 # ---------------------------------------------------------------------------
@@ -81,16 +96,16 @@ def dense_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
     return x, {"k": k, "v": v}
 
 
-def dense_block_decode(cfg, p, x, cache, pos, *, sh=None):
+def dense_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla"):
     h = apply_norm(cfg, p["norm1"], x)
-    a, nk, nv, npos = decode_attention(cfg, p["attn"], h, cache["k"], cache["v"], cache["pos"], pos, sh=sh)
+    a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl)
     if cfg.parallel_residual:
         f = ffn(cfg, p["mlp"], h, sh=sh)
         x = x + a + f
     else:
         x = x + a
         x = x + ffn(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x), sh=sh)
-    return x, {"k": nk, "v": nv, "pos": npos}
+    return x, new_attn
 
 
 # ---------------------------------------------------------------------------
@@ -142,16 +157,16 @@ def moe_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
     return x, {"k": k, "v": v}
 
 
-def moe_block_decode(cfg, p, x, cache, pos, *, sh=None):
+def moe_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla"):
     h = apply_norm(cfg, p["norm1"], x)
-    a, nk, nv, npos = decode_attention(cfg, p["attn"], h, cache["k"], cache["v"], cache["pos"], pos, sh=sh)
+    a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl)
     x = x + a
     h2 = apply_norm(cfg, p["norm2"], x)
     mo, _ = moe_ffn(cfg, p["moe"], h2, sh=sh)
     if cfg.moe.dense_residual:
         mo = mo + ffn(cfg, p["dense_mlp"], apply_norm(cfg, p["norm_dense"], x), sh=sh)
     x = x + mo
-    return x, {"k": nk, "v": nv, "pos": npos}
+    return x, new_attn
 
 
 # ---------------------------------------------------------------------------
@@ -242,13 +257,13 @@ def hybrid_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
     return x, {"k": k, "v": v, "conv": conv_state, "ssm": ssm_state}
 
 
-def hybrid_block_decode(cfg, p, x, cache, pos, *, sh=None):
+def hybrid_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla"):
     h = apply_norm(cfg, p["norm1"], x)
-    a, nk, nv, npos = decode_attention(cfg, p["attn"], h, cache["k"], cache["v"], cache["pos"], pos, sh=sh)
+    a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl)
     m, (conv_state, ssm_state) = ssm_mod.ssm_step(cfg, p["ssm"], h, cache["conv"], cache["ssm"])
     x = x + _hybrid_combine(p, a, m, x.dtype)
     x = x + ffn(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x), sh=sh)
-    return x, {"k": nk, "v": nv, "pos": npos, "conv": conv_state, "ssm": ssm_state}
+    return x, dict(new_attn, conv=conv_state, ssm=ssm_state)
 
 
 # ---------------------------------------------------------------------------

@@ -200,6 +200,106 @@ def _reset_pos(cache):
     return tree_map_with_path(lambda p, l: fix(p.split("/"), l), cache)
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (vLLM-style block pool + per-request block tables)
+# ---------------------------------------------------------------------------
+
+PAGED_FAMILIES = ("dense", "moe", "hybrid")
+
+NULL_BLOCK = 0  # physical block 0 is never allocated: inactive batch slots
+# and padding entries of short block tables point here, so their (masked)
+# decode writes/reads can never touch a live request's blocks.
+
+
+def supports_paged(cfg) -> bool:
+    """Paged caching applies to the growing-KV attention families.  ssm/rwkv
+    states are O(1) per request (nothing to page); vlm's grouped layer scan
+    keeps the dense layout."""
+    return cfg.family in PAGED_FAMILIES
+
+
+def paged_layer_cache_layout(
+    cfg,
+    num_blocks: int,
+    block_size: int,
+    max_batch: int,
+    max_blocks_per_seq: int,
+    dtype,
+    *,
+    quantized: bool = False,
+) -> dict:
+    """(shape, dtype) tree for ONE layer's paged cache.
+
+    ``k``/``v`` are the global block pools — physical blocks are shared
+    across batch slots and handed out by ``serving.paged.BlockAllocator``.
+    ``tbl`` maps each slot's logical block index to a physical block id.
+    ``quantized`` stores the pools int8 with per-(token, head) fp32 scales
+    (the ``serving.kvquant`` KIVI layout).
+    """
+    if not supports_paged(cfg):
+        raise ValueError(f"no paged cache for family {cfg.family!r} ({cfg.name})")
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    kv_dtype = jnp.int8 if quantized else dtype
+    ent = {
+        "k": ((num_blocks, block_size, KV, hd), kv_dtype),
+        "v": ((num_blocks, block_size, KV, hd), kv_dtype),
+        "tbl": ((max_batch, max_blocks_per_seq), jnp.int32),
+    }
+    if quantized:
+        ent["k_scale"] = ((num_blocks, block_size, KV, 1), jnp.float32)
+        ent["v_scale"] = ((num_blocks, block_size, KV, 1), jnp.float32)
+    if cfg.family == "hybrid":
+        # recurrent states stay slot-dense: O(1) per request, nothing to page
+        H, P = cfg.num_heads, ssm_mod.head_dim_inner(cfg)
+        di, K = ssm_mod.d_inner(cfg), cfg.ssm.conv_width
+        ent["conv"] = ((max_batch, K - 1, di), dtype)
+        ent["ssm"] = ((max_batch, H, P, cfg.ssm.state_size), jnp.float32)
+    return ent
+
+
+def init_paged_cache(
+    cfg,
+    num_blocks: int,
+    block_size: int,
+    max_batch: int,
+    max_blocks_per_seq: int,
+    dtype,
+    *,
+    quantized: bool = False,
+):
+    """Zero-initialized stacked (L, ...) paged cache; tables point at the
+    null block."""
+    lay = _stack(
+        paged_layer_cache_layout(
+            cfg, num_blocks, block_size, max_batch, max_blocks_per_seq, dtype, quantized=quantized
+        ),
+        num_scan_groups(cfg),
+    )
+    return jax.tree.map(lambda sd: jnp.zeros(*sd), lay, is_leaf=_is_layout_leaf)
+
+
+def paged_cache_bytes(
+    cfg,
+    num_blocks: int,
+    block_size: int,
+    max_batch: int,
+    max_blocks_per_seq: int,
+    dtype,
+    *,
+    quantized: bool = False,
+) -> int:
+    lay = _stack(
+        paged_layer_cache_layout(
+            cfg, num_blocks, block_size, max_batch, max_blocks_per_seq, dtype, quantized=quantized
+        ),
+        num_scan_groups(cfg),
+    )
+    total = 0
+    for shape, dt in jax.tree.leaves(lay, is_leaf=_is_layout_leaf):
+        total += int(np.prod(shape, dtype=np.int64)) * np.dtype(dt).itemsize
+    return total
+
+
 def stacked_cache_axes(cfg) -> dict:
     """Logical axes for the STACKED cache (leading 'layers')."""
     ax = cache_logical_axes(cfg)

@@ -214,7 +214,13 @@ def prefill(cfg, params, batch, *, sh=None, q_chunk=0, remat="none"):
     """Inference prefill. Returns (last-position logits (B,V), raw cache).
 
     The raw cache holds full-length K/V; ``repro.serving.kvcache`` converts it
-    into the ring-buffered decode cache.
+    into the ring-buffered decode cache (or grafts it into paged blocks).
+
+    ``batch["last_index"]`` (optional, (B,) int32): per-sequence index of the
+    last *real* token — the logits are taken there instead of at position
+    S-1.  This is what makes right-padded length-bucketed prefill (the
+    serving engine's recompilation fix) exact for causal attention archs: pad
+    positions beyond ``last_index`` can never influence earlier K/V.
     """
     x, positions = embed_input(cfg, params, batch, sh=sh)
     vision_tokens = batch.get("vision_tokens")
@@ -256,7 +262,12 @@ def prefill(cfg, params, batch, *, sh=None, q_chunk=0, remat="none"):
 
     body = _maybe_remat(body, remat)
     x, raw_cache = jax.lax.scan(body, x, params["blocks"])
-    logits = lm_logits(cfg, params, x[:, -1:], sh=sh)[:, 0]
+    last_index = batch.get("last_index")
+    if last_index is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = jnp.take_along_axis(x, last_index.astype(jnp.int32)[:, None, None], axis=1)
+    logits = lm_logits(cfg, params, x_last, sh=sh)[:, 0]
     return logits, raw_cache
 
 
@@ -265,11 +276,17 @@ def prefill(cfg, params, batch, *, sh=None, q_chunk=0, remat="none"):
 # ---------------------------------------------------------------------------
 
 
-def decode_step(cfg, params, cache, token, pos, *, sh=None):
+def decode_step(cfg, params, cache, token, pos, *, sh=None, attn_impl="xla"):
     """One decode step.
 
     token: (B, 1) int32 (ignored dims for audio); pos: (B,) int32 absolute
     position of this token.  Returns (logits (B, V), new cache).
+
+    The cache may be the dense slot layout (``models.cache.init_cache``) or
+    the paged block-pool layout (``models.cache.init_paged_cache``) for
+    dense/moe/hybrid families — the per-layer cache keys select the path.
+    ``attn_impl``: "xla" | "pallas" — paged decode attention backend (dense
+    slot caches always use the jnp path).
     """
     if cfg.is_encoder_only:
         raise ValueError(f"{cfg.name} is encoder-only: no decode step")
@@ -282,7 +299,7 @@ def decode_step(cfg, params, cache, token, pos, *, sh=None):
 
         def body(x, xs):
             p_layer, c_layer = xs
-            x, nc = step(cfg, p_layer, x, c_layer, pos, sh=sh)
+            x, nc = step(cfg, p_layer, x, c_layer, pos, sh=sh, attn_impl=attn_impl)
             return x, nc
 
     elif fam == "ssm":
@@ -296,7 +313,7 @@ def decode_step(cfg, params, cache, token, pos, *, sh=None):
 
         def body(x, xs):
             p_layer, c_layer = xs
-            x, nc = B.hybrid_block_decode(cfg, p_layer, x, c_layer, pos, sh=sh)
+            x, nc = B.hybrid_block_decode(cfg, p_layer, x, c_layer, pos, sh=sh, attn_impl=attn_impl)
             return x, nc
 
     elif fam == "vlm":

@@ -1,19 +1,29 @@
 from repro.serving.engine import InferenceEngine, Request, RequestState
 from repro.serving.kvcache import (
+    clear_block_row,
     clear_slot,
     decode_cache_from_prefill,
+    graft_prefill_into_blocks,
     make_engine_cache,
+    make_table_row,
     write_request_into_slot,
 )
+from repro.serving.paged import BlockAllocator, OutOfBlocks, blocks_needed
 from repro.serving.sampler import sample_token
 
 __all__ = [
     "InferenceEngine",
     "Request",
     "RequestState",
+    "BlockAllocator",
+    "OutOfBlocks",
+    "blocks_needed",
+    "clear_block_row",
     "clear_slot",
     "decode_cache_from_prefill",
+    "graft_prefill_into_blocks",
     "make_engine_cache",
+    "make_table_row",
     "write_request_into_slot",
     "sample_token",
 ]

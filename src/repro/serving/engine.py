@@ -1,19 +1,45 @@
-"""Continuous-batching inference engine.
+"""Continuous-batching inference engine with a paged KV cache.
 
 The paper's inference QoS class served as a real engine: a fixed-size decode
 batch whose slots are continuously refilled as requests finish (Orca-style
 iteration-level scheduling).  Admission runs a (batch=1) prefill and grafts
-the resulting cache into a free slot; every ``step()`` advances ALL active
-slots one token through the jitted ``decode_step``.
+the resulting cache into the engine's persistent cache; every ``step()``
+advances ALL active slots one token through the jitted ``decode_step``.
+
+Two cache layouts:
+
+* ``cache_kind="paged"`` (default for dense/moe/hybrid) — a global block
+  pool + per-request block tables (``serving.paged.BlockAllocator``).
+  Admission is gated on **free blocks**, not free slots: a request reserves
+  ``ceil((prompt + max_new_tokens) / block_size)`` blocks, so short requests
+  are cheap and concurrency is bounded by actual cache *bytes in use*
+  instead of ``max_batch x max_seq`` worst-case lines.  This is the
+  decode-HBM fix: the same byte budget admits strictly more concurrent
+  requests whenever requests are shorter than ``max_seq``.
+* ``cache_kind="dense"`` — the original slot-granular ring-buffer cache
+  (still used by ssm/vlm families, and as the A/B baseline in benchmarks).
+
+Paged requests are bounded by ``max_seq`` (the block-table width); the dense
+ring additionally serves sliding-window archs past ``max_seq`` by wrapping.
+Window archs on the paged path write every position but *reclaim* blocks as
+they slide out of the window (``_reclaim_window_blocks``), so steady-state
+usage is O(window) blocks per request, matching the ring's footprint.
+
+Prefill recompilation fix: prompts are right-padded to power-of-two length
+buckets (attention-only families, where causality makes padding exact), so
+the jitted prefill compiles O(log max_seq) traces instead of one per
+distinct prompt length.  ``quantize_kv=True`` stores paged pools int8 with
+per-(token, head) scales (``serving.kvquant``), halving KV bytes vs bf16.
 
 Online vs offline QoS (paper §IV.F): online requests preempt the admission
-queue; offline requests backfill free slots.
+queue; offline requests backfill free capacity.
 """
 
 from __future__ import annotations
 
 import itertools
 import time
+import warnings
 from dataclasses import dataclass, field
 from enum import Enum
 from typing import Optional
@@ -22,14 +48,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, prefill
+from repro.models import decode_step, init_paged_cache, prefill, supports_paged
 from repro.serving.kvcache import (
+    clear_block_row,
     clear_slot,
     decode_cache_from_prefill,
+    graft_prefill_into_blocks,
     make_engine_cache,
+    make_table_row,
     write_request_into_slot,
 )
+from repro.serving.paged import BlockAllocator, blocks_needed
 from repro.serving.sampler import sample_token
+
+# families whose prefill is exact under right-padding (causal attention:
+# pad positions can never influence earlier K/V or the last-real-token
+# logits).  ssm/hybrid recurrent states WOULD absorb pad tokens, so those
+# families prefill at exact prompt length (one trace per length).
+BUCKETED_FAMILIES = ("dense", "moe", "vlm")
+MIN_PREFILL_BUCKET = 8
 
 
 class RequestState(Enum):
@@ -45,9 +82,12 @@ class Request:
     max_new_tokens: int = 32
     online: bool = True  # online requests admit before offline ones
     temperature: float = 0.0
+    top_k: int = 0  # 0 = full softmax (only applies when temperature > 0)
     state: RequestState = RequestState.WAITING
     generated: list[int] = field(default_factory=list)
     slot: Optional[int] = None
+    blocks: list[int] = field(default_factory=list)  # paged: owned physical blocks
+    freed_blocks: int = 0  # paged: leading blocks already reclaimed (sliding window)
     submit_t: float = field(default_factory=time.monotonic)
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
@@ -58,34 +98,131 @@ class Request:
 
 
 class InferenceEngine:
-    def __init__(self, cfg, params, *, max_batch: int = 4, max_seq: int = 512, eos_token: int = 1, seed: int = 0):
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        max_batch: int = 4,
+        max_seq: int = 512,
+        eos_token: int = 1,
+        seed: int = 0,
+        cache_kind: str = "paged",
+        block_size: int = 32,
+        num_blocks: Optional[int] = None,
+        cache_dtype=jnp.bfloat16,
+        quantize_kv: bool = False,
+        attn_impl: str = "xla",
+    ):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only; no decode serving")
+        if cache_kind not in ("paged", "dense"):
+            raise ValueError(f"cache_kind={cache_kind!r}")
+        if cache_kind == "paged" and not supports_paged(cfg):
+            # ssm states are O(1) per slot (nothing to page); vlm keeps the
+            # grouped dense layout
+            cache_kind = "dense"
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos = eos_token
-        self.cache = make_engine_cache(cfg, max_batch, max_seq, jnp.float32)
+        self.cache_kind = cache_kind
+        self.cache_dtype = cache_dtype
+        if quantize_kv and cache_kind != "paged":
+            warnings.warn(
+                f"quantize_kv only applies to paged block pools; ignored for "
+                f"cache_kind={cache_kind!r} ({cfg.name})",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        self.quantize_kv = quantize_kv and cache_kind == "paged"
+        if self.quantize_kv and attn_impl == "pallas":
+            warnings.warn(
+                "int8 block pools have no Pallas kernel yet; decode runs the "
+                "dequantizing jnp reference path despite attn_impl='pallas'",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        self.attn_impl = attn_impl
+
+        if cache_kind == "paged":
+            self.block_size = block_size
+            self.max_blocks_per_seq = -(-max_seq // block_size)
+            if num_blocks is None:
+                # default: same position capacity as the dense layout (+ null)
+                num_blocks = max_batch * self.max_blocks_per_seq + 1
+            self.num_blocks = num_blocks
+            self.allocator = BlockAllocator(num_blocks)
+            self.tbl = np.zeros((max_batch, self.max_blocks_per_seq), np.int32)
+            self._tbl_dirty = True
+            self.cache = init_paged_cache(
+                cfg,
+                num_blocks,
+                block_size,
+                max_batch,
+                self.max_blocks_per_seq,
+                cache_dtype,
+                quantized=self.quantize_kv,
+            )
+        else:
+            self.allocator = None
+            self.cache = make_engine_cache(cfg, max_batch, max_seq, cache_dtype)
+
         self.pos = np.full((max_batch,), 0, np.int32)  # next position per slot
         self.slots: list[Optional[Request]] = [None] * max_batch
         self.queue: list[Request] = []
         self.done: list[Request] = []
         self._ids = itertools.count()
         self._key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q))
+        self._decode = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q, attn_impl=attn_impl))
         self._prefill = jax.jit(lambda p, b: prefill(cfg, p, b))
+        # donate the pool so admission updates only the request's blocks
+        # in place instead of copying the whole pool per graft (donation is
+        # honored on TPU; CPU falls back to a copy)
+        self._graft = jax.jit(
+            lambda c, raw, blocks, n, slot: graft_prefill_into_blocks(cfg, c, raw, blocks, n, slot),
+            donate_argnums=(0,),
+        )
+        self._bucketed = cfg.family in BUCKETED_FAMILIES
         self.steps = 0
         self.tokens_out = 0
+        self.peak_active = 0
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: list[int], *, max_new_tokens: int = 32, online: bool = True, temperature: float = 0.0) -> Request:
+    def submit(
+        self,
+        prompt: list[int],
+        *,
+        max_new_tokens: int = 32,
+        online: bool = True,
+        temperature: float = 0.0,
+        top_k: int = 0,
+    ) -> Request:
+        if not prompt:
+            raise ValueError("empty prompt")
+        total = len(prompt) + max_new_tokens
+        if self.cache_kind == "paged":
+            if total > self.max_seq:
+                raise ValueError(
+                    f"prompt+max_new_tokens={total} exceeds max_seq={self.max_seq}"
+                )
+            if blocks_needed(total, self.block_size) > self.allocator.capacity:
+                raise ValueError(
+                    f"request needs {blocks_needed(total, self.block_size)} blocks, "
+                    f"pool capacity is {self.allocator.capacity}"
+                )
+        elif self.cfg.has_attention and self.cfg.sliding_window == 0 and total > self.max_seq:
+            # full-attention dense cache: positions past max_seq would wrap the
+            # ring buffer and silently corrupt the oldest entries
+            raise ValueError(f"prompt+max_new_tokens={total} exceeds max_seq={self.max_seq}")
         req = Request(
             req_id=next(self._ids),
             prompt=list(prompt),
             max_new_tokens=max_new_tokens,
             online=online,
             temperature=temperature,
+            top_k=top_k,
         )
         self.queue.append(req)
         return req
@@ -94,30 +231,68 @@ class InferenceEngine:
         return [i for i, r in enumerate(self.slots) if r is None]
 
     # ------------------------------------------------------------------
+    def _bucket_len(self, n: int) -> int:
+        """Power-of-two prefill length bucket (bounded trace count)."""
+        if not self._bucketed:
+            return n
+        p = MIN_PREFILL_BUCKET
+        while p < n:
+            p *= 2
+        return min(p, self.max_seq)
+
+    def _run_prefill(self, req: Request):
+        n = len(req.prompt)
+        P = self._bucket_len(n)
+        toks = req.prompt + [0] * (P - n)
+        batch = {
+            "tokens": jnp.asarray(toks, jnp.int32)[None, :],
+            "last_index": jnp.asarray([n - 1], jnp.int32),
+        }
+        if self.cfg.family == "vlm":
+            batch["vision_tokens"] = jnp.zeros(
+                (1, self.cfg.vision.num_image_tokens, self.cfg.d_model), jnp.float32
+            )
+        return self._prefill(self.params, batch)
+
+    # ------------------------------------------------------------------
     def _admit(self) -> None:
-        """Prefill waiting requests into free slots (online first)."""
+        """Prefill waiting requests into free capacity (online first).
+
+        Paged: admission requires a free slot AND enough free blocks for the
+        request's worst case (prompt + max_new_tokens); when the pool is
+        exhausted admission backpressures (FCFS head-of-line) until finished
+        requests free their blocks.
+        """
         free = self._free_slots()
         if not free:
             return
         self.queue.sort(key=lambda r: (not r.online, r.submit_t))
         while free and self.queue:
-            req = self.queue.pop(0)
+            req = self.queue[0]
+            if self.cache_kind == "paged":
+                needed = blocks_needed(len(req.prompt) + req.max_new_tokens, self.block_size)
+                if needed > self.allocator.num_free:
+                    break  # out of blocks: backpressure until frees
+            self.queue.pop(0)
             slot = free.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            batch = {"tokens": prompt}
-            if self.cfg.family == "vlm":
-                batch["vision_tokens"] = jnp.zeros(
-                    (1, self.cfg.vision.num_image_tokens, self.cfg.d_model), jnp.float32
+            logits, raw = self._run_prefill(req)
+            n = len(req.prompt)
+            if self.cache_kind == "paged":
+                req.blocks = self.allocator.alloc(needed)
+                self.cache = self._graft(
+                    self.cache, raw, jnp.asarray(req.blocks, jnp.int32), n, slot
                 )
-            logits, raw = self._prefill(self.params, batch)
-            req_cache = decode_cache_from_prefill(
-                self.cfg, raw, seq_filled=len(req.prompt), decode_len=self.max_seq
-            )
-            self.cache = write_request_into_slot(self.cfg, self.cache, req_cache, slot)
-            self.pos[slot] = len(req.prompt)
+                self.tbl[slot] = make_table_row(req.blocks, self.max_blocks_per_seq)
+                self._tbl_dirty = True
+            else:
+                req_cache = decode_cache_from_prefill(
+                    self.cfg, raw, seq_filled=n, decode_len=self.max_seq
+                )
+                self.cache = write_request_into_slot(self.cfg, self.cache, req_cache, slot)
+            self.pos[slot] = n
             # first generated token comes from the prefill logits
             self._key, sub = jax.random.split(self._key)
-            tok = int(sample_token(logits[0], req.temperature, sub))
+            tok = int(sample_token(logits[0], req.temperature, sub, top_k=req.top_k))
             req.generated.append(tok)
             req.first_token_t = time.monotonic()
             req.state = RequestState.ACTIVE
@@ -125,6 +300,7 @@ class InferenceEngine:
             self.slots[slot] = req
             self.tokens_out += 1
             self._finish_if_done(req)
+        self.peak_active = max(self.peak_active, sum(r is not None for r in self.slots))
 
     def _finish_if_done(self, req: Request) -> None:
         if req.state != RequestState.ACTIVE:
@@ -134,17 +310,57 @@ class InferenceEngine:
             req.done_t = time.monotonic()
             slot = req.slot
             self.slots[slot] = None
-            self.cache = clear_slot(self.cfg, self.cache, slot)
+            if self.cache_kind == "paged":
+                self.allocator.free(req.blocks[req.freed_blocks :])
+                req.blocks = []
+                req.freed_blocks = 0
+                self.tbl[slot] = 0  # null block
+                self._tbl_dirty = True
+                self.cache = clear_block_row(self.cfg, self.cache, slot)
+            else:
+                self.cache = clear_slot(self.cfg, self.cache, slot)
             self.pos[slot] = 0
             self.done.append(req)
 
     # ------------------------------------------------------------------
+    def _reclaim_window_blocks(self, req: Request) -> None:
+        """Sliding-window archs: free blocks that have slid out of the window.
+
+        The dense layout ring-buffers W positions; the paged layout instead
+        writes every position, so without reclamation a window arch would
+        hold O(total) blocks where the ring holds O(window).  A block
+        covering positions [i*bs, (i+1)*bs) is dead once its last position
+        can no longer be attended by any future query (positions only grow):
+        (i+1)*bs - 1 <= next_pos - W.  Dead blocks return to the pool
+        mid-decode and their table entries point back at the null block (the
+        window mask already excludes those positions in both decode impls).
+        """
+        W = self.cfg.sliding_window
+        if W <= 0:
+            return
+        nxt = int(self.pos[req.slot])
+        d = min((nxt - W + 1) // self.block_size, len(req.blocks))
+        if d <= req.freed_blocks:
+            return
+        self.allocator.free(req.blocks[req.freed_blocks : d])
+        self.tbl[req.slot, req.freed_blocks : d] = 0
+        req.freed_blocks = d
+        self._tbl_dirty = True
+
+    def _sync_tables(self) -> None:
+        if self.cache_kind != "paged" or not self._tbl_dirty:
+            return
+        L = self.cache["tbl"].shape[0]
+        self.cache["tbl"] = jnp.broadcast_to(jnp.asarray(self.tbl)[None], (L,) + self.tbl.shape)
+        self._tbl_dirty = False
+
     def step(self) -> int:
         """One engine iteration: admit, then advance all active slots."""
         self._admit()
         active = [r for r in self.slots if r is not None]
         if not active:
             return 0
+        self._sync_tables()
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for r in active:
             tokens[r.slot, 0] = r.generated[-1]
@@ -154,11 +370,13 @@ class InferenceEngine:
         produced = 0
         for r in active:
             self._key, sub = jax.random.split(self._key)
-            tok = int(sample_token(logits[r.slot], r.temperature, sub))
+            tok = int(sample_token(logits[r.slot], r.temperature, sub, top_k=r.top_k))
             r.generated.append(tok)
             self.pos[r.slot] += 1
             produced += 1
             self.tokens_out += 1
+            if self.cache_kind == "paged":
+                self._reclaim_window_blocks(r)
             self._finish_if_done(r)
         return produced
 
@@ -167,15 +385,36 @@ class InferenceEngine:
             if not self.queue and all(s is None for s in self.slots):
                 break
             self.step()
+        else:
+            n_queued = len(self.queue)
+            n_active = sum(r is not None for r in self.slots)
+            if n_queued or n_active:
+                warnings.warn(
+                    f"run_until_drained exhausted max_steps={max_steps} with "
+                    f"{n_queued} queued and {n_active} active requests unfinished",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
         return self.done
 
     # ------------------------------------------------------------------
+    def cache_bytes(self) -> int:
+        """Device bytes held by the engine's KV cache (pools + tables)."""
+        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(self.cache))
+
     def stats(self) -> dict:
         ttfts = [r.ttft for r in self.done if r.ttft is not None]
-        return {
+        s = {
+            "cache_kind": self.cache_kind,
             "requests_done": len(self.done),
             "decode_steps": self.steps,
             "tokens_out": self.tokens_out,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
             "slot_utilization": 1.0 - len(self._free_slots()) / self.max_batch,
+            "peak_active": self.peak_active,
+            "cache_bytes": self.cache_bytes(),
         }
+        if self.cache_kind == "paged":
+            s["block_size"] = self.block_size
+            s.update({f"alloc_{k}": v for k, v in self.allocator.stats().items()})
+        return s

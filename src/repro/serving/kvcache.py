@@ -1,15 +1,20 @@
-"""KV-cache management: prefill -> ring-buffered decode cache, slot surgery.
+"""KV-cache management: prefill -> decode cache, slot and block-table surgery.
 
-``decode_cache_from_prefill`` converts the full-length K/V returned by
-``models.prefill`` into the fixed-size ring-buffer cache the decode step
-consumes (sliding-window archs keep only the last W tokens; the ring-slot
-invariant is slot = pos % W).
-
-``write_request_into_slot`` grafts a single request's cache into one batch
-slot of the engine's persistent cache — the core mutation of continuous
-batching.  Batch-dim discovery is driven by the cache's logical axes
+Dense layout: ``decode_cache_from_prefill`` converts the full-length K/V
+returned by ``models.prefill`` into the fixed-size ring-buffer cache the
+decode step consumes (sliding-window archs keep only the last W tokens; the
+ring-slot invariant is slot = pos % W), and ``write_request_into_slot``
+grafts a single request's cache into one batch slot of the engine's
+persistent cache.  Batch-dim discovery is driven by the cache's logical axes
 ("kv_batch"), so the same code serves dense KV caches, RWKV states, hybrid
 conv/SSM states and VLM grouped caches.
+
+Paged layout: ``graft_prefill_into_blocks`` scatters the prompt's K/V into
+the physical blocks a request was allocated (quantizing on the way in for
+int8 pools) and ``clear_block_row`` resets a freed slot's table row to the
+null block — graft/clear become block-table ops instead of cache-line
+copies, which is exactly why freeing a paged request is O(blocks) metadata
+instead of an O(max_seq) wipe.
 """
 
 from __future__ import annotations
@@ -18,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.cache import (
+    NULL_BLOCK,
     cache_window,
     init_cache,
     stacked_cache_axes,
@@ -134,3 +140,75 @@ def clear_slot(cfg, engine_cache, slot: int):
 
 def make_engine_cache(cfg, max_batch: int, max_seq: int, dtype=jnp.bfloat16):
     return init_cache(cfg, max_batch, max_seq, dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged block-table surgery
+# ---------------------------------------------------------------------------
+
+
+def _scatter_prompt(pool, kv, blocks):
+    """kv: (L, nb*bs, ...token dims) -> pool (L, N, bs, ...) at ``blocks``."""
+    L, T = kv.shape[:2]
+    nb = len(blocks)
+    bs = T // nb
+    tiles = kv.reshape((L, nb, bs) + kv.shape[2:])
+    return pool.at[:, jnp.asarray(blocks, jnp.int32)].set(tiles.astype(pool.dtype))
+
+
+def graft_prefill_into_blocks(cfg, pool_cache, raw_cache, blocks, seq_filled: int, slot: int):
+    """Write a (batch=1) prefill raw cache into the allocated pool blocks.
+
+    ``blocks``: physical block ids covering logical positions
+    [0, len(blocks)*bs); positions beyond ``seq_filled`` (right-padded
+    bucketed prefill, partial last block) are written as zeros — they are
+    masked at attention time and overwritten by decode as the sequence grows.
+    Hybrid conv/SSM states are grafted into batch slot ``slot`` of their
+    slot-dense entries.  Returns the updated pool cache.
+    """
+    bs = pool_cache["k"].shape[2]
+    span = len(blocks) * bs
+    quantized = pool_cache["k"].dtype == jnp.int8
+    new = dict(pool_cache)
+    for name in ("k", "v"):
+        kv = raw_cache[name][:, 0]  # (L, S, KV, hd)
+        S = kv.shape[1]
+        if S < span:
+            kv = jnp.pad(kv, ((0, 0), (0, span - S), (0, 0), (0, 0)))
+        elif S > span:
+            kv = kv[:, :span]
+        # zero pad positions >= seq_filled so reused blocks never leak stale K/V
+        valid = jnp.arange(span) < seq_filled
+        kv = jnp.where(valid[None, :, None, None], kv, 0)
+        if quantized:
+            from repro.serving.kvquant import quantize
+
+            q, scale = quantize(kv)
+            new[name] = _scatter_prompt(pool_cache[name], q, blocks)
+            new[f"{name}_scale"] = _scatter_prompt(pool_cache[f"{name}_scale"], scale, blocks)
+        else:
+            new[name] = _scatter_prompt(pool_cache[name], kv, blocks)
+    for state in ("conv", "ssm"):
+        if state in pool_cache:
+            new[state] = pool_cache[state].at[:, slot].set(
+                raw_cache[state][:, 0].astype(pool_cache[state].dtype)
+            )
+    return new
+
+
+def make_table_row(blocks, max_blocks_per_seq: int):
+    """Pad a request's block list to a full table row (null-block padded)."""
+    row = list(blocks) + [NULL_BLOCK] * (max_blocks_per_seq - len(blocks))
+    return row
+
+
+def clear_block_row(cfg, pool_cache, slot: int):
+    """Free a paged request: reset recurrent-state slots (hybrid).  The K/V
+    blocks themselves need no wipe — the allocator recycles them and the
+    attention mask hides any stale positions until they are overwritten."""
+    new = dict(pool_cache)
+    for state in ("conv", "ssm"):
+        if state in pool_cache:
+            leaf = pool_cache[state]
+            new[state] = leaf.at[:, slot].set(jnp.zeros(leaf.shape[2:], leaf.dtype))
+    return new

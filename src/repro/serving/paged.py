@@ -1,0 +1,108 @@
+"""Paged KV-cache block allocator (vLLM-style, host-side).
+
+The engine's KV memory is a global pool of fixed-size blocks shared by every
+batch slot; a request owns ``ceil(tokens / block_size)`` physical blocks,
+recorded in its block-table row.  Admission is gated on *free blocks*, not
+free slots — the structural change that decouples max concurrency from
+``max_seq``: a 16-token request costs 1 block, not a ``max_seq``-long dense
+cache line.
+
+Physical block 0 is the **null block**: never allocated, permanently the
+target of inactive slots' block tables, so their (masked) decode writes land
+in a scratch bin instead of a live request's memory.
+
+Blocks are position-independent (any physical block can hold any logical
+block), so "fragmentation" here is purely a locality concern: a scattered
+free list means scattered DMA reads on real hardware.  ``fragmentation()``
+reports it and ``defrag()`` sorts the free list so subsequent allocations are
+contiguous — allocation/free/defrag accounting without any copying.
+"""
+
+from __future__ import annotations
+
+
+class OutOfBlocks(RuntimeError):
+    """Allocation would exceed the pool — admission must backpressure."""
+
+
+def blocks_needed(tokens: int, block_size: int) -> int:
+    """Physical blocks required to hold ``tokens`` cache positions."""
+    return -(-max(tokens, 1) // block_size)
+
+
+class BlockAllocator:
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 null + 1 usable), got {num_blocks}")
+        self.num_blocks = num_blocks
+        # LIFO free list: freshly freed (cache-warm) blocks are reused first
+        self._free = list(range(num_blocks - 1, 0, -1))
+        self._used: set[int] = set()
+        self.peak_in_use = 0
+        self.total_allocs = 0
+        self.total_frees = 0
+
+    # -- accounting ----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Usable blocks (excludes the null block)."""
+        return self.num_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return len(self._used)
+
+    def fragmentation(self) -> float:
+        """1 - (longest contiguous free run / free blocks); 0 = fully
+        contiguous free space, -> 1 = maximally scattered."""
+        if len(self._free) <= 1:
+            return 0.0
+        ids = sorted(self._free)
+        longest = run = 1
+        for a, b in zip(ids, ids[1:]):
+            run = run + 1 if b == a + 1 else 1
+            longest = max(longest, run)
+        return 1.0 - longest / len(ids)
+
+    def defrag(self) -> float:
+        """Sort the free list so future allocations come out id-contiguous
+        (DMA locality on real HW).  Returns the pre-defrag fragmentation."""
+        frag = self.fragmentation()
+        self._free.sort(reverse=True)  # popped from the tail -> ascending ids
+        return frag
+
+    # -- alloc / free --------------------------------------------------
+    def alloc(self, n: int) -> list[int]:
+        """Allocate ``n`` blocks or raise ``OutOfBlocks`` (all-or-nothing)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise OutOfBlocks(f"need {n} blocks, {len(self._free)} free of {self.capacity}")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._used.update(blocks)
+        self.total_allocs += n
+        self.peak_in_use = max(self.peak_in_use, len(self._used))
+        return blocks
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if b not in self._used:
+                raise ValueError(f"double free / foreign block {b}")
+            self._used.remove(b)
+            self._free.append(b)
+        self.total_frees += len(blocks)
+
+    def stats(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "blocks_in_use": self.blocks_in_use,
+            "num_free": self.num_free,
+            "peak_in_use": self.peak_in_use,
+            "total_allocs": self.total_allocs,
+            "total_frees": self.total_frees,
+            "fragmentation": round(self.fragmentation(), 3),
+        }

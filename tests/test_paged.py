@@ -1,0 +1,398 @@
+"""Paged KV-cache serving: allocator invariants, kernel-vs-oracle, paged-vs-
+dense decode equivalence, block-count admission backpressure, and the
+concurrency-per-byte acceptance property (paged admits strictly more
+concurrent requests than dense under the same cache-byte budget)."""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.model import reduce_for_smoke
+from repro.configs import get_config
+from repro.kernels import paged_attention
+from repro.kernels.paged_attention_ref import paged_attention_ref
+from repro.models import decode_step, forward, init_paged_cache, init_params
+from repro.serving import BlockAllocator, InferenceEngine, OutOfBlocks, RequestState, blocks_needed
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_invariants():
+    a = BlockAllocator(9)  # 1 null + 8 usable
+    assert a.capacity == 8 and a.num_free == 8 and a.blocks_in_use == 0
+    b1 = a.alloc(3)
+    b2 = a.alloc(2)
+    assert len(set(b1) | set(b2)) == 5, "allocations must not overlap"
+    assert 0 not in b1 + b2, "null block must never be allocated"
+    assert a.blocks_in_use == 5 and a.num_free == 3
+    assert a.peak_in_use == 5
+    a.free(b1)
+    assert a.blocks_in_use == 2 and a.num_free == 6
+    b3 = a.alloc(6)  # freed blocks are reusable
+    assert set(b3).isdisjoint(b2)
+    with pytest.raises(OutOfBlocks):
+        a.alloc(1)
+    a.free(b2)
+    with pytest.raises(ValueError):
+        a.free(b2)  # double free
+
+
+def test_allocator_defrag_accounting():
+    a = BlockAllocator(17)
+    blocks = a.alloc(16)
+    a.free([b for b in blocks if b % 2 == 0])  # free every other block
+    assert a.fragmentation() > 0.5
+    a.defrag()
+    a.free([b for b in blocks if b % 2 == 1])
+    a.defrag()
+    assert a.fragmentation() == 0.0
+    assert a.alloc(3) == sorted(a._used)  # post-defrag allocs are contiguous
+
+
+def test_blocks_needed():
+    assert blocks_needed(1, 16) == 1
+    assert blocks_needed(16, 16) == 1
+    assert blocks_needed(17, 16) == 2
+    assert blocks_needed(0, 16) == 1  # a live request always owns >= 1 block
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+KERNEL_CASES = [
+    # B, nb, bs, H, KV, hd, window, softcap, dtype
+    (2, 4, 8, 4, 2, 16, 0, 0.0, jnp.float32),
+    (3, 3, 16, 8, 2, 32, 0, 0.0, jnp.float32),
+    (2, 4, 8, 4, 4, 16, 12, 0.0, jnp.float32),  # sliding window
+    (1, 2, 8, 2, 1, 64, 0, 30.0, jnp.float32),  # MQA + softcap
+    (2, 4, 8, 4, 2, 16, 0, 0.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", KERNEL_CASES)
+def test_paged_attention_kernel_matches_oracle(case):
+    B, nb, bs, H, KV, hd, win, cap, dt = case
+    N = 1 + B * nb
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dt)
+    kp = jax.random.normal(ks[1], (N, bs, KV, hd), dt)
+    vp = jax.random.normal(ks[2], (N, bs, KV, hd), dt)
+    # non-trivial tables: each sequence's blocks shuffled through the pool
+    perm = jax.random.permutation(jax.random.PRNGKey(7), N - 1) + 1
+    tbl = perm[: B * nb].reshape(B, nb).astype(jnp.int32)
+    lens = jnp.array([1 + (7 * b) % (nb * bs) for b in range(B)], jnp.int32)
+    out = paged_attention(q, kp, vp, tbl, lens, softcap=cap, window=win)
+    ref = paged_attention_ref(q, kp, vp, tbl, lens, softcap=cap, window=win)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))))
+    assert err < tol, f"{case}: err={err}"
+
+
+def test_paged_attention_int8_pools_close_to_fp():
+    B, nb, bs, H, KV, hd = 2, 3, 8, 4, 2, 16
+    from repro.serving.kvquant import quantize
+
+    N = 1 + B * nb
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (N, bs, KV, hd))
+    vp = jax.random.normal(ks[2], (N, bs, KV, hd))
+    tbl = jnp.arange(1, 1 + B * nb, dtype=jnp.int32).reshape(B, nb)
+    lens = jnp.full((B,), nb * bs, jnp.int32)
+    kq, kscale = quantize(kp)
+    vq, vscale = quantize(vp)
+    fp = paged_attention_ref(q, kp, vp, tbl, lens)
+    q8 = paged_attention_ref(q, kq, vq, tbl, lens, k_scale=kscale, v_scale=vscale)
+    err = float(jnp.max(jnp.abs(fp - q8)))
+    assert err < 5e-2, f"int8 paged attention drifted {err} from fp"
+
+
+# ---------------------------------------------------------------------------
+# paged decode == teacher forcing (dense / moe / hybrid, both impls)
+# ---------------------------------------------------------------------------
+
+B, S, BS = 1, 24, 8
+
+PAGED_DECODE_CASES = [
+    ("olmo-1b", "xla"),
+    ("olmo-1b", "pallas"),
+    ("qwen3-moe-235b-a22b", "xla"),
+    ("hymba-1.5b", "xla"),  # sliding window + ssm states pass-through
+    ("hymba-1.5b", "pallas"),
+]
+
+
+@pytest.mark.parametrize("arch,impl", PAGED_DECODE_CASES)
+def test_paged_decode_matches_teacher_forcing(arch, impl):
+    cfg = reduce_for_smoke(get_config(arch))
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key, jnp.float32)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    logits_tf, _ = forward(cfg, params, {"tokens": tokens})
+
+    nb = S // BS
+    cache = init_paged_cache(cfg, 1 + B * nb, BS, B, nb, jnp.float32)
+    tbl = jnp.arange(1, 1 + B * nb, dtype=jnp.int32).reshape(B, nb)
+    cache["tbl"] = jnp.broadcast_to(tbl[None], (cfg.num_layers, B, nb))
+    dec = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q, attn_impl=impl))
+    errs = []
+    for t in range(S):
+        lg, cache = dec(params, cache, tokens[:, t : t + 1], jnp.full((B,), t, jnp.int32))
+        errs.append(float(np.max(np.abs(np.asarray(lg) - np.asarray(logits_tf[:, t])))))
+    assert max(errs) < 5e-4, f"{arch}/{impl}: paged decode diverges by {max(errs)}"
+
+
+# ---------------------------------------------------------------------------
+# engine: paged vs dense end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+ENGINE_SMOKE_ARCHS = ["olmo-1b", "qwen3-moe-235b-a22b", "hymba-1.5b"]
+
+
+@pytest.mark.parametrize("arch", ENGINE_SMOKE_ARCHS)
+def test_paged_engine_matches_dense_engine(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = [[5, 9, 12], [7, 3], [20, 21, 22, 23], [4, 4, 8]]
+    outs = {}
+    for kind in ("dense", "paged"):
+        eng = InferenceEngine(
+            cfg,
+            params,
+            max_batch=3,
+            max_seq=64,
+            cache_kind=kind,
+            block_size=8,
+            cache_dtype=jnp.float32,
+        )
+        reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        eng.run_until_drained()
+        assert all(r.state == RequestState.DONE for r in reqs)
+        outs[kind] = [r.generated for r in reqs]
+    assert outs["paged"] == outs["dense"], f"{arch}: paged decode diverged from dense"
+
+
+def test_paged_admits_more_concurrency_same_byte_budget(setup):
+    """Acceptance: under the same cache-byte budget, the paged engine
+    sustains strictly more concurrent requests than the dense engine."""
+    cfg, params = setup
+    dense = InferenceEngine(
+        cfg, params, max_batch=2, max_seq=64, cache_kind="dense", cache_dtype=jnp.float32
+    )
+    # 16 blocks x 8 = 128 positions (incl. the null block) <= the dense
+    # engine's 2 x 64 lines — same byte budget, slots decoupled from max_seq
+    paged = InferenceEngine(
+        cfg,
+        params,
+        max_batch=8,
+        max_seq=64,
+        cache_kind="paged",
+        block_size=8,
+        num_blocks=16,
+        cache_dtype=jnp.float32,
+    )
+    assert paged.cache_bytes() <= dense.cache_bytes(), (
+        f"paged budget {paged.cache_bytes()} exceeds dense {dense.cache_bytes()}"
+    )
+    for eng in (dense, paged):
+        for i in range(8):
+            eng.submit([3 + i, 4, 5], max_new_tokens=5)  # 8 tokens -> 1 block each
+        eng.run_until_drained()
+        assert len(eng.done) == 8
+    assert dense.stats()["peak_active"] == 2  # slot-capped
+    assert paged.stats()["peak_active"] > dense.stats()["peak_active"]
+    assert paged.stats()["decode_steps"] < dense.stats()["decode_steps"]
+
+
+def test_out_of_blocks_backpressure(setup):
+    cfg, params = setup
+    # 4 usable blocks of 8 = 32 positions; each request needs 2 blocks
+    eng = InferenceEngine(
+        cfg, params, max_batch=4, max_seq=64, cache_kind="paged", block_size=8, num_blocks=5
+    )
+    reqs = [eng.submit([1 + i, 2, 3], max_new_tokens=6) for i in range(4)]
+    eng.step()
+    states = [r.state for r in reqs]
+    assert states.count(RequestState.ACTIVE) == 2, "only 2 requests fit the pool"
+    assert states.count(RequestState.WAITING) == 2, "admission must backpressure"
+    assert eng.allocator.num_free == 0
+    eng.run_until_drained()
+    assert all(r.state == RequestState.DONE for r in reqs), "freed blocks must recycle"
+    assert eng.allocator.blocks_in_use == 0
+
+
+def test_sliding_window_blocks_reclaimed_mid_decode(setup):
+    """Window archs must free blocks that slide out of the window while the
+    request is still decoding (paged footprint stays O(window), like the
+    dense ring) — and still decode the exact same tokens."""
+    cfg, params = setup
+    cfg = cfg.replace(sliding_window=8)
+    outs = {}
+    for kind in ("dense", "paged"):
+        eng = InferenceEngine(
+            cfg,
+            params,
+            max_batch=1,
+            max_seq=64,
+            cache_kind=kind,
+            block_size=4,
+            cache_dtype=jnp.float32,
+        )
+        r = eng.submit([5, 9, 12], max_new_tokens=21)  # 24 tokens = 6 blocks
+        if kind == "paged":
+            for _ in range(16):
+                eng.step()
+            assert r.state == RequestState.ACTIVE
+            assert r.freed_blocks > 0, "no blocks reclaimed after sliding past window"
+            assert eng.tbl[0, 0] == 0, "reclaimed table entries must point at null"
+            assert eng.allocator.blocks_in_use < 6
+        eng.run_until_drained()
+        assert eng.allocator is None or eng.allocator.blocks_in_use == 0
+        outs[kind] = r.generated
+    assert outs["paged"] == outs["dense"]
+
+
+def test_oversized_request_rejected(setup):
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, max_batch=2, max_seq=32, cache_kind="paged", block_size=8)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(2, 30)), max_new_tokens=16)  # 28 + 16 > 32
+    dense = InferenceEngine(cfg, params, max_batch=2, max_seq=32, cache_kind="dense")
+    with pytest.raises(ValueError):
+        dense.submit(list(range(2, 30)), max_new_tokens=16)  # would wrap the ring
+
+
+def test_quantized_block_pool_runs_and_saves_bytes(setup):
+    cfg, params = setup
+    fp = InferenceEngine(
+        cfg, params, max_batch=2, max_seq=64, block_size=8, cache_dtype=jnp.float32
+    )
+    q8 = InferenceEngine(
+        cfg,
+        params,
+        max_batch=2,
+        max_seq=64,
+        block_size=8,
+        cache_dtype=jnp.float32,
+        quantize_kv=True,
+    )
+    r_fp = fp.submit([5, 9, 12], max_new_tokens=6)
+    r_q8 = q8.submit([5, 9, 12], max_new_tokens=6)
+    fp.run_until_drained()
+    q8.run_until_drained()
+    assert len(r_q8.generated) == 6
+    # int8 + fp32 scales vs fp32 pools: > 2x KV-byte saving
+    assert q8.cache_bytes() < fp.cache_bytes() / 2
+    assert r_q8.generated == r_fp.generated, "int8 KV flipped greedy tokens at smoke scale"
+
+
+# ---------------------------------------------------------------------------
+# serving-path bugfix satellites
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_trace_count_bounded(setup):
+    """Mixed prompt lengths must hit a bounded number of prefill traces
+    (power-of-two buckets), not one XLA compile per distinct length."""
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, max_batch=4, max_seq=64, cache_dtype=jnp.float32)
+    lengths = list(range(2, 18))  # 16 distinct lengths
+    for n in lengths:
+        eng.submit([(3 + i) % cfg.vocab_size for i in range(n)], max_new_tokens=2)
+    eng.run_until_drained()
+    assert len(eng.done) == len(lengths)
+    traces = eng._prefill._cache_size()
+    assert traces <= 3, f"{traces} prefill traces for buckets of {lengths}"  # 8/16/32
+    assert traces < len(set(lengths))
+
+
+def test_bucketed_prefill_is_exact(setup):
+    """Padding the prompt to a bucket must not change the first sampled
+    token or any subsequent decode (causal masking + last_index logits)."""
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, max_batch=1, max_seq=64, cache_dtype=jnp.float32)
+    prompt = [11, 7, 5]  # length 3 -> bucket 8
+    r = eng.submit(prompt, max_new_tokens=5)
+    eng.run_until_drained()
+    toks = list(prompt)
+    ref = []
+    for _ in range(5):
+        logits, _ = forward(cfg, params, {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+        t = int(jnp.argmax(logits[0, -1]))
+        ref.append(t)
+        toks.append(t)
+    assert r.generated == ref
+
+
+def test_run_until_drained_warns_on_truncation(setup):
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, max_batch=1, max_seq=64)
+    eng.submit([1, 2, 3], max_new_tokens=30)
+    eng.submit([4, 5, 6], max_new_tokens=30)
+    with pytest.warns(RuntimeWarning, match="queued.*active.*unfinished"):
+        eng.run_until_drained(max_steps=2)
+
+
+def test_run_until_drained_no_warning_when_drained(setup):
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, max_batch=2, max_seq=64)
+    eng.submit([1, 2, 3], max_new_tokens=3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng.run_until_drained()
+
+
+def test_top_k_one_matches_greedy(setup):
+    cfg, params = setup
+    greedy = InferenceEngine(cfg, params, max_batch=1, max_seq=64, cache_dtype=jnp.float32)
+    topk1 = InferenceEngine(cfg, params, max_batch=1, max_seq=64, cache_dtype=jnp.float32)
+    rg = greedy.submit([5, 9, 12], max_new_tokens=6, temperature=0.0)
+    rk = topk1.submit([5, 9, 12], max_new_tokens=6, temperature=1.0, top_k=1)
+    greedy.run_until_drained()
+    topk1.run_until_drained()
+    assert rk.generated == rg.generated, "top_k=1 sampling must reduce to greedy"
+
+
+def test_top_k_restricts_support(setup):
+    """With top_k=k, every sampled token must be in the top-k of the step's
+    logits — verified indirectly: k=1 is deterministic across seeds."""
+    cfg, params = setup
+    outs = set()
+    for seed in range(3):
+        eng = InferenceEngine(
+            cfg, params, max_batch=1, max_seq=64, seed=seed, cache_dtype=jnp.float32
+        )
+        r = eng.submit([8, 6, 4], max_new_tokens=4, temperature=0.7, top_k=1)
+        eng.run_until_drained()
+        outs.add(tuple(r.generated))
+    assert len(outs) == 1
+
+
+def test_cache_dtype_knob(setup):
+    cfg, params = setup
+    bf16 = InferenceEngine(cfg, params, max_batch=2, max_seq=64)  # default bf16
+    fp32 = InferenceEngine(cfg, params, max_batch=2, max_seq=64, cache_dtype=jnp.float32)
+    assert bf16.cache["k"].dtype == jnp.bfloat16
+    assert fp32.cache["k"].dtype == jnp.float32
+    assert bf16.cache_bytes() < fp32.cache_bytes()
+    r = bf16.submit([5, 9, 12], max_new_tokens=4)
+    bf16.run_until_drained()
+    assert len(r.generated) == 4

@@ -26,9 +26,10 @@ def greedy_reference(cfg, params, prompt, n_new):
     return toks[len(prompt) :]
 
 
-def test_continuous_batching_matches_reference(setup):
+@pytest.mark.parametrize("cache_kind", ["paged", "dense"])
+def test_continuous_batching_matches_reference(setup, cache_kind):
     cfg, params = setup
-    eng = InferenceEngine(cfg, params, max_batch=3, max_seq=64)
+    eng = InferenceEngine(cfg, params, max_batch=3, max_seq=64, cache_kind=cache_kind)
     prompts = [[5, 9, 12], [7, 3], [20, 21, 22, 23], [4, 4, 8]]  # 4 reqs, 3 slots
     reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
     eng.run_until_drained()
@@ -66,3 +67,16 @@ def test_eos_stops_generation(setup):
     r = eng.submit([1, 2, 3], max_new_tokens=5)
     eng.run_until_drained()
     assert len(r.generated) == 5  # eos never sampled -> runs to max_new_tokens
+
+
+def test_never_admitted_request_has_none_ttft(setup):
+    """A queued-but-never-admitted request must report ttft=None (the serve
+    CLI guards its ms formatting on this)."""
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, max_batch=1, max_seq=64)
+    first = eng.submit([1, 2, 3], max_new_tokens=30)
+    starved = eng.submit([4, 5, 6], max_new_tokens=4)
+    with pytest.warns(RuntimeWarning):
+        eng.run_until_drained(max_steps=2)
+    assert first.ttft is not None
+    assert starved.ttft is None and starved.state == RequestState.WAITING
