@@ -17,7 +17,12 @@ from repro.kernels.babelstream import (
     stream_triad,
 )
 from repro.kernels.flash_attention_ops import flash_attention
-from repro.kernels.paged_attention_ops import paged_attention, paged_attention_quantized
+from repro.kernels.paged_attention_ops import (
+    paged_attention,
+    paged_attention_quantized,
+    paged_prefill_attention,
+    paged_prefill_attention_quantized,
+)
 from repro.kernels.rwkv6_scan_ops import wkv6
 
 __all__ = [
@@ -27,6 +32,8 @@ __all__ = [
     "paged_attention",
     "paged_attention_ops",
     "paged_attention_quantized",
+    "paged_prefill_attention",
+    "paged_prefill_attention_quantized",
     "stream_add",
     "stream_bytes",
     "stream_copy",

@@ -1,8 +1,8 @@
-"""Paged-attention decode — Pallas TPU kernel (block-table gather, online softmax).
+"""Paged attention — Pallas TPU kernels (block-table gather, online softmax).
 
-vLLM-style decode attention over a paged KV cache: each sequence's K/V lives
-in non-contiguous fixed-size blocks of a global pool, addressed through a
-per-sequence block table.  The kernel never materializes the gathered
+vLLM-style attention over a paged KV cache: each sequence's K/V lives in
+non-contiguous fixed-size blocks of a global pool, addressed through a
+per-sequence block table.  The kernels never materialize the gathered
 (B, S, KV, hd) view — the block table is a *scalar-prefetch* operand
 (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec index_map dereferences it
 to DMA exactly the physical block each grid step needs:
@@ -14,6 +14,19 @@ The minormost grid dimension walks a sequence's logical blocks and *revisits*
 the output block, carrying the running max / denominator / fp32 accumulator
 in VMEM scratch between steps — the same grid-order online-softmax
 formulation as ``kernels/flash_attention.py``.
+
+Two entry points share that structure:
+
+* ``paged_attention_bhd``     — decode: one query token per sequence.
+* ``paged_prefill_attention_bhd`` — **chunked prefill**: ``C`` query tokens
+  per sequence at absolute positions ``start + [0, C)``, attending causally
+  over everything already written to the paged cache (shared prefix blocks,
+  earlier chunks, and this chunk's own K/V — which the caller scatters in
+  *before* calling).  Queries are laid out (B, KV, C*qpk, hd) with row
+  ``r -> chunk offset r // qpk``, so the in-kernel causal/window mask is a
+  per-row position compare.  This is what lets a long prompt be processed in
+  budgeted chunks interleaved with decode steps instead of one blocking
+  batch=1 prefill.
 
 Tile notes: the (block_size, hd) K/V tile should be 128-aligned on real TPUs
 (block_size a multiple of the sublane tile, hd = 128 lanes for the assigned
@@ -140,3 +153,118 @@ def paged_attention_bhd(
         interpret=interpret,
     )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32), qg, k_pool, v_pool)
     return out.reshape(B, H, hd)
+
+
+def _paged_prefill_kernel(
+    tbl_ref,  # scalar-prefetch (B, nb) int32
+    start_ref,  # scalar-prefetch (B,) int32 — absolute position of chunk row 0
+    q_ref,  # (1, 1, C*qpk, hd)
+    k_ref,  # (1, bs, 1, hd) — physical block picked by the index_map
+    v_ref,
+    o_ref,  # (1, 1, C*qpk, hd), revisited across the block dimension
+    acc_ref,  # VMEM (C*qpk, hd) fp32
+    m_ref,  # VMEM (C*qpk, 1) fp32
+    l_ref,  # VMEM (C*qpk, 1) fp32
+    *,
+    scale: float,
+    softcap: float,
+    window: int,
+    block_size: int,
+    qpk: int,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (C*qpk, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (C*qpk, bs)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    start = start_ref[b]
+    # row r of the query tile is chunk offset r // qpk -> absolute q position
+    q_pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // qpk
+    kv_pos = i * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = kv_pos <= q_pos  # causal: the chunk's own K/V is already written
+    if window > 0:
+        ok &= (q_pos - kv_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = (alpha * l_ref[:, 0] + jnp.sum(p, axis=1))[:, None]
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_cur[:, None]
+
+    @pl.when(i == nb - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+        o_ref[0, 0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_bhd(
+    q: jax.Array,  # (B, C, H, hd) chunk queries
+    k_pool: jax.Array,  # (N, bs, KV, hd) global block pool (chunk K/V written)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, nb) int32 physical block ids
+    start: jax.Array,  # (B,) int32 absolute position of the chunk's first token
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Chunked-prefill attention: every chunk token attends causally over the
+    paged logical view [0, start + its offset].  Table entries past the last
+    written block must point at a valid (e.g. null) block — they are DMA'd
+    and fully masked by the causal compare.  Returns (B, C, H, hd)."""
+    B, C, H, hd = q.shape
+    N, bs, KV, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    assert H % KV == 0, (H, KV)
+    qpk = H // KV
+    rows = C * qpk
+    scale = 1.0 / math.sqrt(hd)
+
+    # (B, C, H, hd) -> (B, KV, C*qpk, hd), row r = (chunk offset r//qpk, group r%qpk)
+    qg = q.reshape(B, C, KV, qpk, hd).transpose(0, 2, 1, 3, 4).reshape(B, KV, rows, hd)
+    kernel = functools.partial(
+        _paged_prefill_kernel,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+        block_size=bs,
+        qpk=qpk,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, hd), lambda b, kv, i, tbl, st: (b, kv, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, kv, i, tbl, st: (tbl[b, i], 0, kv, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, kv, i, tbl, st: (tbl[b, i], 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, hd), lambda b, kv, i, tbl, st: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, hd), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rows, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, rows, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), start.astype(jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(B, KV, C, qpk, hd).transpose(0, 2, 1, 3, 4).reshape(B, C, H, hd)

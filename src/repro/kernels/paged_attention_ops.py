@@ -1,6 +1,7 @@
-"""Jit'd public wrapper for the paged-attention decode kernel.
+"""Jit'd public wrappers for the paged-attention kernels (decode + chunked
+prefill).
 
-Routes fp pools through the Pallas kernel (interpret mode off-TPU); int8
+Routes fp pools through the Pallas kernels (interpret mode off-TPU); int8
 pools with per-(token, head) scales fall back to the dequantizing jnp
 reference — the int8 savings are an HBM-traffic property, and on this CPU
 image both paths are emulated anyway.
@@ -13,8 +14,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention import paged_attention_bhd
-from repro.kernels.paged_attention_ref import paged_attention_ref
+from repro.kernels.paged_attention import paged_attention_bhd, paged_prefill_attention_bhd
+from repro.kernels.paged_attention_ref import paged_attention_ref, paged_prefill_attention_ref
 
 
 def _on_tpu() -> bool:
@@ -43,6 +44,57 @@ def paged_attention(
         softcap=softcap,
         window=window,
         interpret=not _on_tpu(),
+    )
+
+
+@partial(jax.jit, static_argnames=("softcap", "window"))
+def paged_prefill_attention(
+    q: jax.Array,  # (B, C, H, hd) chunk queries
+    k_pool: jax.Array,  # (N, bs, KV, hd)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, nb) int32
+    start: jax.Array,  # (B,) int32 absolute position of the chunk's first token
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+) -> jax.Array:
+    if k_pool.dtype == jnp.int8:
+        raise ValueError("int8 pools need scales: use paged_prefill_attention_quantized")
+    return paged_prefill_attention_bhd(
+        q,
+        k_pool,
+        v_pool,
+        block_tables,
+        start,
+        softcap=softcap,
+        window=window,
+        interpret=not _on_tpu(),
+    )
+
+
+@partial(jax.jit, static_argnames=("softcap", "window"))
+def paged_prefill_attention_quantized(
+    q: jax.Array,
+    k_pool: jax.Array,  # int8 (N, bs, KV, hd)
+    v_pool: jax.Array,
+    k_scale: jax.Array,  # fp32 (N, bs, KV, 1)
+    v_scale: jax.Array,
+    block_tables: jax.Array,
+    start: jax.Array,
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+) -> jax.Array:
+    return paged_prefill_attention_ref(
+        q,
+        k_pool,
+        v_pool,
+        block_tables,
+        start,
+        softcap=softcap,
+        window=window,
+        k_scale=k_scale,
+        v_scale=v_scale,
     )
 
 

@@ -70,3 +70,49 @@ def paged_attention_ref(
     w = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bkgs,bskd->bkgd", w, v)
     return ctx.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(
+    q: jax.Array,  # (B, C, H, hd) chunk queries
+    k_pool: jax.Array,  # (N, bs, KV, hd) global block pool (chunk K/V written)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, nb) int32 physical block ids (0 = null)
+    start: jax.Array,  # (B,) int32 absolute position of the chunk's first token
+    *,
+    softcap: float = 0.0,
+    window: int = 0,
+    k_scale: jax.Array | None = None,  # (N, bs, KV, 1) fp32 (int8 pools)
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Chunked-prefill oracle: C query tokens per sequence at absolute
+    positions ``start + [0, C)`` attend causally (+ window) over the gathered
+    paged view — the multi-query-token twin of ``paged_attention_ref``.
+    Returns (B, C, H, hd) in q.dtype."""
+    B, C, H, hd = q.shape
+    KV = k_pool.shape[2]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    k = gather_blocks(k_pool, block_tables).astype(jnp.float32)  # (B, S, KV, hd)
+    v = gather_blocks(v_pool, block_tables).astype(jnp.float32)
+    if k_scale is not None:
+        k = k * gather_blocks(k_scale, block_tables)
+    if v_scale is not None:
+        v = v * gather_blocks(v_scale, block_tables)
+    S = k.shape[1]
+
+    qg = q.astype(jnp.float32).reshape(B, C, KV, qpk, hd)
+    s = jnp.einsum("bckgd,bskd->bkcgs", qg, k) * scale  # (B, KV, C, qpk, S)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B, C)
+    kv_pos = jnp.arange(S, dtype=jnp.int32)[None, None, :]  # logical positions
+    ok = kv_pos <= q_pos[:, :, None]  # causal: chunk K/V is already written
+    if window > 0:
+        ok &= (q_pos[:, :, None] - kv_pos) < window
+    s = jnp.where(ok[:, None, :, None, :], s, NEG_INF)
+
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bkcgs,bskd->bckgd", w, v)
+    return ctx.reshape(B, C, H, hd).astype(q.dtype)

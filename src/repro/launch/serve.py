@@ -1,13 +1,18 @@
 """Serving launcher: continuous-batching engine over a synthetic request mix.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mistral-nemo-12b \\
-        --requests 12 --max-batch 4 --cache paged --block-size 16
+        --requests 12 --max-batch 4 --cache paged --block-size 16 \\
+        --shared-prefix 32 --prefill-budget 16
 
 Runs the paper's inference QoS class end-to-end: online requests admitted
 ahead of offline backfill, per-request TTFT, paged-pool block accounting and
-engine utilization stats.  ``--cache dense`` selects the slot-granular
-baseline; ``--quantize-kv`` stores paged pools int8 (KIVI scales);
-``--attn-impl pallas`` routes decode through the paged-attention kernel.
+engine utilization stats.  ``--shared-prefix N`` prepends a common N-token
+system prompt to every request so the prefix cache's hit rate / saved
+prefill tokens show up in the stats; ``--prefill-budget`` bounds prompt
+tokens processed per engine step (chunked prefill interleaved with decode).
+``--cache dense`` selects the slot-granular baseline; ``--quantize-kv``
+stores paged pools int8 (KIVI scales); ``--attn-impl pallas`` routes decode
+and prefill chunks through the paged-attention kernels.
 """
 
 from __future__ import annotations
@@ -41,6 +46,18 @@ def main() -> None:
     ap.add_argument("--attn-impl", default="xla", choices=("xla", "pallas"))
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument(
+        "--shared-prefix", type=int, default=0,
+        help="prepend a common N-token system prompt to every request",
+    )
+    ap.add_argument(
+        "--no-prefix-cache", action="store_true",
+        help="disable prefix caching (measure the re-prefill baseline)",
+    )
+    ap.add_argument(
+        "--prefill-budget", type=int, default=0,
+        help="max prompt tokens prefilled per step (0 = unbounded)",
+    )
     args = ap.parse_args()
 
     cfg = reduce_for_smoke(get_config(args.arch))
@@ -59,12 +76,15 @@ def main() -> None:
         cache_dtype=DTYPES[args.cache_dtype],
         quantize_kv=args.quantize_kv,
         attn_impl=args.attn_impl,
+        prefix_cache=False if args.no_prefix_cache else None,
+        prefill_budget=args.prefill_budget,
     )
 
     rng = random.Random(args.seed)
+    system = [rng.randrange(2, cfg.vocab_size) for _ in range(args.shared_prefix)]
     reqs = []
     for i in range(args.requests):
-        prompt = [rng.randrange(2, cfg.vocab_size) for _ in range(rng.randint(2, 8))]
+        prompt = system + [rng.randrange(2, cfg.vocab_size) for _ in range(rng.randint(2, 8))]
         reqs.append(
             eng.submit(
                 prompt,
@@ -78,7 +98,8 @@ def main() -> None:
     for r in reqs:
         kind = "online " if r.online else "offline"
         ttft = f"{r.ttft*1e3:8.1f}ms" if r.ttft is not None else "   never admitted"
-        print(f"req {r.req_id:3d} [{kind}] ttft={ttft} len={len(r.generated)} head={r.generated[:6]}")
+        hit = f" prefix_hit={r.prefix_hit_tokens:3d}" if r.prefix_hit_tokens else ""
+        print(f"req {r.req_id:3d} [{kind}] ttft={ttft} len={len(r.generated)}{hit} head={r.generated[:6]}")
     print("[serve] stats:", eng.stats())
 
 

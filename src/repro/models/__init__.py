@@ -4,7 +4,7 @@ from repro.models.initializers import (
     param_logical_axes,
     param_specs,
 )
-from repro.models.model import decode_step, forward, prefill
+from repro.models.model import decode_step, forward, prefill, prefill_step, supports_chunked_prefill
 from repro.models.cache import (
     abstract_cache,
     cache_bytes,
@@ -23,6 +23,8 @@ __all__ = [
     "decode_step",
     "forward",
     "prefill",
+    "prefill_step",
+    "supports_chunked_prefill",
     "abstract_cache",
     "cache_bytes",
     "init_cache",

@@ -289,6 +289,104 @@ def decode_attention(
     return _out(cfg, p, ctx, x.dtype), new_k, new_v, new_cache_pos
 
 
+def paged_chunk_attention(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    tbl_row: jax.Array,
+    start: jax.Array,
+    *,
+    impl: str = "xla",
+    sh=None,
+):
+    """Chunked-prefill attention against a paged (block-pooled) KV cache.
+
+    x:       (B, C, D) chunk token embedding stream
+    cache:   {"k","v": (N, bs, KV, hd) pools, "tbl": engine table (unused
+             here — mid-prefill slots keep a null engine row so interleaved
+             decode steps can't touch their blocks), ...}
+    tbl_row: (B, nb) int32 — the *request's* block table, covering every
+             logical block of prompt + generation
+    start:   (B,) int32 absolute position of the chunk's first token.
+
+    The chunk's K/V is scattered into its blocks first (position t lands in
+    block ``tbl_row[b, t // bs]`` at offset ``t % bs``), then every chunk
+    query attends causally over the logical view [0, start + offset] — the
+    shared prefix blocks grafted by admission, earlier chunks, and this
+    chunk itself.  ``impl="pallas"`` uses the multi-query-token
+    ``kernels.paged_prefill_attention`` kernel, ``impl="xla"`` the jnp
+    oracle; int8 pools quantize on the way in and take the dequantizing
+    reference.  Returns (out, new_cache) with the same keys as ``cache``.
+    """
+    k_pool, v_pool = cache["k"], cache["v"]
+    B, C, _ = x.shape
+    bs = k_pool.shape[1]
+    quantized = k_pool.dtype == jnp.int8
+
+    positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B, C)
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.rotary_pct > 0 and not cfg.learned_pos_embedding:
+        q = apply_rope(q, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+
+    phys = jnp.take_along_axis(tbl_row, positions // bs, axis=1)  # (B, C)
+    off = positions % bs
+    new_cache = dict(cache)
+    if quantized:
+        from repro.serving.kvquant import quantize
+
+        kq, ks = quantize(k)
+        vq, vs = quantize(v)
+        new_cache["k"] = k_pool.at[phys, off].set(kq)
+        new_cache["v"] = v_pool.at[phys, off].set(vq)
+        new_cache["k_scale"] = cache["k_scale"].at[phys, off].set(ks)
+        new_cache["v_scale"] = cache["v_scale"].at[phys, off].set(vs)
+    else:
+        new_cache["k"] = k_pool.at[phys, off].set(k.astype(k_pool.dtype))
+        new_cache["v"] = v_pool.at[phys, off].set(v.astype(v_pool.dtype))
+
+    if quantized:
+        from repro.kernels.paged_attention_ops import paged_prefill_attention_quantized
+
+        ctx = paged_prefill_attention_quantized(
+            q,
+            new_cache["k"],
+            new_cache["v"],
+            new_cache["k_scale"],
+            new_cache["v_scale"],
+            tbl_row,
+            start,
+            softcap=cfg.attn_logit_softcap,
+            window=cfg.sliding_window,
+        )
+    elif impl == "pallas":
+        from repro.kernels.paged_attention_ops import paged_prefill_attention
+
+        ctx = paged_prefill_attention(
+            q,
+            new_cache["k"],
+            new_cache["v"],
+            tbl_row,
+            start,
+            softcap=cfg.attn_logit_softcap,
+            window=cfg.sliding_window,
+        )
+    else:
+        from repro.kernels.paged_attention_ref import paged_prefill_attention_ref
+
+        ctx = paged_prefill_attention_ref(
+            q,
+            new_cache["k"],
+            new_cache["v"],
+            tbl_row,
+            start,
+            softcap=cfg.attn_logit_softcap,
+            window=cfg.sliding_window,
+        )
+    return _out(cfg, p, ctx, x.dtype), new_cache
+
+
 def paged_decode_attention(
     cfg,
     p: dict,

@@ -21,6 +21,7 @@ from repro.models.attention import (
     attention_specs,
     cross_attention,
     decode_attention,
+    paged_chunk_attention,
     paged_decode_attention,
     prefill_attention,
     self_attention,
@@ -96,6 +97,20 @@ def dense_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
     return x, {"k": k, "v": v}
 
 
+def dense_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla"):
+    """Chunked-prefill step: like ``dense_block_decode`` but for a C-token
+    chunk written/attended through the request's own paged block table."""
+    h = apply_norm(cfg, p["norm1"], x)
+    a, new_attn = paged_chunk_attention(cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl)
+    if cfg.parallel_residual:
+        f = ffn(cfg, p["mlp"], h, sh=sh)
+        x = x + a + f
+    else:
+        x = x + a
+        x = x + ffn(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x), sh=sh)
+    return x, new_attn
+
+
 def dense_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla"):
     h = apply_norm(cfg, p["norm1"], x)
     a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl)
@@ -155,6 +170,20 @@ def moe_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
         mo = mo + ffn(cfg, p["dense_mlp"], apply_norm(cfg, p["norm_dense"], x), sh=sh)
     x = x + mo
     return x, {"k": k, "v": v}
+
+
+def moe_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla"):
+    """Chunked-prefill step for MoE blocks.  Routing sees exactly the chunk's
+    tokens (no length-bucket pad tokens competing for expert capacity)."""
+    h = apply_norm(cfg, p["norm1"], x)
+    a, new_attn = paged_chunk_attention(cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl)
+    x = x + a
+    h2 = apply_norm(cfg, p["norm2"], x)
+    mo, _ = moe_ffn(cfg, p["moe"], h2, sh=sh)
+    if cfg.moe.dense_residual:
+        mo = mo + ffn(cfg, p["dense_mlp"], apply_norm(cfg, p["norm_dense"], x), sh=sh)
+    x = x + mo
+    return x, new_attn
 
 
 def moe_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla"):

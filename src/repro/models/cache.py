@@ -202,6 +202,13 @@ def _reset_pos(cache):
 
 # ---------------------------------------------------------------------------
 # paged KV cache (vLLM-style block pool + per-request block tables)
+#
+# Physical blocks are position-independent and may appear in SEVERAL slots'
+# table rows at once: the prefix cache (serving/prefix.py) maps full
+# token-aligned prompt blocks by content hash and shares them across
+# requests by refcount (serving/paged.py).  Shared blocks are write-once —
+# decode and chunked prefill only ever write positions past the shared
+# prefix, which land in blocks owned by exactly one row.
 # ---------------------------------------------------------------------------
 
 PAGED_FAMILIES = ("dense", "moe", "hybrid")

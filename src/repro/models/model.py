@@ -272,6 +272,61 @@ def prefill(cfg, params, batch, *, sh=None, q_chunk=0, remat="none"):
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (paged cache)
+# ---------------------------------------------------------------------------
+
+CHUNKED_PREFILL_FAMILIES = ("dense", "moe")
+
+
+def supports_chunked_prefill(cfg) -> bool:
+    """Chunked prefill needs (a) a paged cache and (b) per-chunk state that is
+    fully captured by the written K/V.  Hybrid conv/SSM (and rwkv) recurrent
+    states absorb the whole prompt in one pass and cannot be resumed
+    mid-prompt, so those families keep the blocking prefill+graft path."""
+    return cfg.family in CHUNKED_PREFILL_FAMILIES
+
+
+def prefill_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla"):
+    """Process one prompt *chunk* against a paged cache.
+
+    tokens:  (B, C) int32 — C consecutive prompt tokens
+    start:   (B,) int32 absolute position of the chunk's first token
+    tbl_row: (B, nb) int32 — the request's block table (the engine's
+             ``cache["tbl"]`` rows stay null until the prompt completes, so
+             interleaved decode steps can't touch a half-prefilled request).
+
+    Writes the chunk's K/V into the request's blocks, attends causally over
+    the paged history [0, start + C) — shared prefix blocks included — and
+    returns (logits (B, V) at the chunk's LAST token, new cache); the final
+    chunk's logits are the prompt logits admission samples from.
+
+    Exactness: for dense archs chaining chunks reproduces full-prompt
+    ``prefill`` exactly (attention is causal, FFN/norms per-token).  For MoE
+    the expert-capacity limit is computed per routed batch, so when capacity
+    *binds* (low ``capacity_factor``) which tokens overflow can differ
+    between chunked, exact-length, and pad-bucketed prefill — all three are
+    defensible GShard semantics (the chunked path is the only one where pad
+    tokens never compete for capacity), but they only coincide token-for-
+    token when no token is dropped.
+    """
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"no chunked prefill for family {cfg.family!r} ({cfg.name})")
+    C = tokens.shape[1]
+    positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    x, _ = embed_input(cfg, params, {"tokens": tokens, "positions": positions}, sh=sh)
+    step = B.dense_block_chunk if cfg.family == "dense" else B.moe_block_chunk
+
+    def body(x, xs):
+        p_layer, c_layer = xs
+        x, nc = step(cfg, p_layer, x, c_layer, tbl_row, start, sh=sh, attn_impl=attn_impl)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    logits = lm_logits(cfg, params, x[:, -1], sh=sh)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
 

@@ -1,7 +1,8 @@
-from repro.serving.engine import InferenceEngine, Request, RequestState
+from repro.serving.engine import InferenceEngine, Request, RequestState, binary_chunks
 from repro.serving.kvcache import (
     clear_block_row,
     clear_slot,
+    copy_block_rows,
     decode_cache_from_prefill,
     graft_prefill_into_blocks,
     make_engine_cache,
@@ -9,7 +10,8 @@ from repro.serving.kvcache import (
     write_request_into_slot,
 )
 from repro.serving.paged import BlockAllocator, OutOfBlocks, blocks_needed
-from repro.serving.sampler import sample_token
+from repro.serving.prefix import PartialHit, PrefixIndex, chain_hash
+from repro.serving.sampler import sample_token, sample_tokens
 
 __all__ = [
     "InferenceEngine",
@@ -17,13 +19,19 @@ __all__ = [
     "RequestState",
     "BlockAllocator",
     "OutOfBlocks",
+    "PartialHit",
+    "PrefixIndex",
+    "binary_chunks",
     "blocks_needed",
+    "chain_hash",
     "clear_block_row",
     "clear_slot",
+    "copy_block_rows",
     "decode_cache_from_prefill",
     "graft_prefill_into_blocks",
     "make_engine_cache",
     "make_table_row",
     "write_request_into_slot",
     "sample_token",
+    "sample_tokens",
 ]

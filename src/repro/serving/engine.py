@@ -1,38 +1,55 @@
-"""Continuous-batching inference engine with a paged KV cache.
+"""Continuous-batching inference engine with a prefix-cached paged KV cache.
 
 The paper's inference QoS class served as a real engine: a fixed-size decode
 batch whose slots are continuously refilled as requests finish (Orca-style
-iteration-level scheduling).  Admission runs a (batch=1) prefill and grafts
-the resulting cache into the engine's persistent cache; every ``step()``
-advances ALL active slots one token through the jitted ``decode_step``.
+iteration-level scheduling).  Every ``step()`` advances ALL active slots one
+token through the jitted ``decode_step``; prompt processing is **incremental
+and shared** for the paged attention families:
+
+* **Prefix caching** (``serving.prefix``): every full token-aligned block of
+  a prefilled prompt is indexed by a content chain hash.  Admission matches
+  the longest cached prefix, bumps refcounts on the shared blocks (a partial
+  tail hit is copied-on-write into a private block) and schedules only the
+  *suffix* for prefill — a fleet of requests sharing a system prompt
+  computes it once.  Finished requests park their indexed blocks in an LRU
+  pool that is evicted on demand, not freed eagerly.
+* **Chunked prefill**: instead of a blocking batch=1 prefill at admission,
+  prompts are processed in per-``step()`` budgeted chunks
+  (``prefill_budget`` tokens per step, binary-decomposed into power-of-two
+  chunk sizes for a bounded trace count) interleaved with decode — one long
+  prompt no longer stalls every decoding request.  Suffix chunks attend over
+  the request's already-grafted paged history via the multi-query-token
+  ``kernels.paged_prefill_attention`` path; a mid-prefill slot keeps a null
+  row in the engine block table so interleaved decode steps can't touch its
+  blocks.
 
 Two cache layouts:
 
 * ``cache_kind="paged"`` (default for dense/moe/hybrid) — a global block
   pool + per-request block tables (``serving.paged.BlockAllocator``).
-  Admission is gated on **free blocks**, not free slots: a request reserves
-  ``ceil((prompt + max_new_tokens) / block_size)`` blocks, so short requests
-  are cheap and concurrency is bounded by actual cache *bytes in use*
-  instead of ``max_batch x max_seq`` worst-case lines.  This is the
-  decode-HBM fix: the same byte budget admits strictly more concurrent
-  requests whenever requests are shorter than ``max_seq``.
+  Admission is gated on **free blocks** (cached refcount-0 blocks count:
+  they are evictable on demand): a request reserves
+  ``ceil((prompt + max_new_tokens) / block_size)`` blocks minus whatever the
+  prefix cache already holds, so concurrency is bounded by actual cache
+  *bytes in use* and shared prefixes admit for the price of their suffix.
 * ``cache_kind="dense"`` — the original slot-granular ring-buffer cache
   (still used by ssm/vlm families, and as the A/B baseline in benchmarks).
 
-Paged requests are bounded by ``max_seq`` (the block-table width); the dense
-ring additionally serves sliding-window archs past ``max_seq`` by wrapping.
-Window archs on the paged path write every position but *reclaim* blocks as
-they slide out of the window (``_reclaim_window_blocks``), so steady-state
-usage is O(window) blocks per request, matching the ring's footprint.
+Hybrid (attention+SSM) archs page their K/V but their recurrent states
+absorb the whole prompt in one pass, so they keep the blocking
+prefill+graft admission (no prefix sharing / chunking); dense/moe take the
+incremental path.  Window archs reclaim blocks that slide out of the window
+mid-decode (shared blocks just drop a reference).  ``quantize_kv=True``
+stores paged pools int8 with per-(token, head) scales (``serving.kvquant``).
 
-Prefill recompilation fix: prompts are right-padded to power-of-two length
-buckets (attention-only families, where causality makes padding exact), so
-the jitted prefill compiles O(log max_seq) traces instead of one per
-distinct prompt length.  ``quantize_kv=True`` stores paged pools int8 with
-per-(token, head) scales (``serving.kvquant``), halving KV bytes vs bf16.
+Per-step sampling is one jitted whole-batch dispatch
+(``sampler.sample_tokens``) with per-slot temperature/top-k carried as data.
+The allocator's free list is auto-defragmented when ``fragmentation()``
+exceeds ``defrag_threshold`` after frees (``defrag_triggers`` in stats).
 
-Online vs offline QoS (paper §IV.F): online requests preempt the admission
-queue; offline requests backfill free capacity.
+Online vs offline QoS (paper §IV.F): the queue is kept in admission order by
+a priority-aware insert — online requests ahead of offline backfill, FCFS
+within each class — instead of re-sorting per admission pass.
 """
 
 from __future__ import annotations
@@ -48,10 +65,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_paged_cache, prefill, supports_paged
+from repro.models import (
+    decode_step,
+    init_paged_cache,
+    prefill,
+    prefill_step,
+    supports_chunked_prefill,
+    supports_paged,
+)
 from repro.serving.kvcache import (
     clear_block_row,
     clear_slot,
+    copy_block_rows,
     decode_cache_from_prefill,
     graft_prefill_into_blocks,
     make_engine_cache,
@@ -59,7 +84,8 @@ from repro.serving.kvcache import (
     write_request_into_slot,
 )
 from repro.serving.paged import BlockAllocator, blocks_needed
-from repro.serving.sampler import sample_token
+from repro.serving.prefix import PrefixIndex
+from repro.serving.sampler import sample_token, sample_tokens
 
 # families whose prefill is exact under right-padding (causal attention:
 # pad positions can never influence earlier K/V or the last-real-token
@@ -67,6 +93,21 @@ from repro.serving.sampler import sample_token
 # families prefill at exact prompt length (one trace per length).
 BUCKETED_FAMILIES = ("dense", "moe", "vlm")
 MIN_PREFILL_BUCKET = 8
+
+
+def binary_chunks(n: int) -> list[int]:
+    """Split ``n`` tokens into power-of-two chunk sizes, largest first
+    (e.g. 52 -> [32, 16, 4]).  Chunk lengths drawn from a log-bounded set
+    keep the jitted ``prefill_step`` trace count O(log max_seq) without any
+    pad tokens — padding would perturb MoE expert-capacity routing."""
+    out = []
+    bit = 1 << max(n.bit_length() - 1, 0)
+    while n > 0:
+        if n >= bit:
+            out.append(bit)
+            n -= bit
+        bit >>= 1
+    return out
 
 
 class RequestState(Enum):
@@ -88,6 +129,11 @@ class Request:
     slot: Optional[int] = None
     blocks: list[int] = field(default_factory=list)  # paged: owned physical blocks
     freed_blocks: int = 0  # paged: leading blocks already reclaimed (sliding window)
+    prefill_pos: int = 0  # chunked: prompt tokens already in the cache
+    prefilling: bool = False  # chunked: admitted but prompt not fully processed
+    prefix_hit_tokens: int = 0  # prompt tokens served from the prefix cache
+    reg_block: int = 0  # prefix registration resume point (block index, ...
+    reg_parent: int = 0  # ... chain hash) — registration is incremental
     submit_t: float = field(default_factory=time.monotonic)
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
@@ -113,6 +159,9 @@ class InferenceEngine:
         cache_dtype=jnp.bfloat16,
         quantize_kv: bool = False,
         attn_impl: str = "xla",
+        prefix_cache: Optional[bool] = None,
+        prefill_budget: int = 0,
+        defrag_threshold: float = 0.5,
     ):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only; no decode serving")
@@ -146,6 +195,28 @@ class InferenceEngine:
             )
         self.attn_impl = attn_impl
 
+        # chunked prefill (and with it prefix caching) needs a paged cache
+        # and a family whose chunk state is fully captured by written K/V
+        self._chunked = cache_kind == "paged" and supports_chunked_prefill(cfg)
+        if prefix_cache and not self._chunked:
+            warnings.warn(
+                f"prefix_cache needs a paged cache and a chunk-resumable "
+                f"family (dense/moe); disabled for {cfg.name} "
+                f"({cache_kind}/{cfg.family})",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        if prefill_budget > 0 and not self._chunked:
+            warnings.warn(
+                f"prefill_budget requires chunked prefill (paged cache + "
+                f"dense/moe family); {cfg.name} ({cache_kind}/{cfg.family}) "
+                f"keeps the blocking admission prefill",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+        self.prefill_budget = prefill_budget
+        self.defrag_threshold = defrag_threshold
+
         if cache_kind == "paged":
             self.block_size = block_size
             self.max_blocks_per_seq = -(-max_seq // block_size)
@@ -154,6 +225,11 @@ class InferenceEngine:
                 num_blocks = max_batch * self.max_blocks_per_seq + 1
             self.num_blocks = num_blocks
             self.allocator = BlockAllocator(num_blocks)
+            self.prefix = (
+                PrefixIndex(self.allocator, block_size)
+                if (self._chunked if prefix_cache is None else prefix_cache and self._chunked)
+                else None
+            )
             self.tbl = np.zeros((max_batch, self.max_blocks_per_seq), np.int32)
             self._tbl_dirty = True
             self.cache = init_paged_cache(
@@ -167,27 +243,42 @@ class InferenceEngine:
             )
         else:
             self.allocator = None
+            self.prefix = None
             self.cache = make_engine_cache(cfg, max_batch, max_seq, cache_dtype)
 
         self.pos = np.full((max_batch,), 0, np.int32)  # next position per slot
         self.slots: list[Optional[Request]] = [None] * max_batch
         self.queue: list[Request] = []
         self.done: list[Request] = []
+        self._prefilling: list[Request] = []  # chunked: admission (FCFS) order
         self._ids = itertools.count()
         self._key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q, attn_impl=attn_impl))
         self._prefill = jax.jit(lambda p, b: prefill(cfg, p, b))
-        # donate the pool so admission updates only the request's blocks
-        # in place instead of copying the whole pool per graft (donation is
-        # honored on TPU; CPU falls back to a copy)
+        # donate the pool so admission/chunk updates touch only the request's
+        # blocks in place instead of copying the whole pool per call (donation
+        # is honored on TPU; CPU falls back to a copy)
         self._graft = jax.jit(
             lambda c, raw, blocks, n, slot: graft_prefill_into_blocks(cfg, c, raw, blocks, n, slot),
             donate_argnums=(0,),
         )
+        if self._chunked:
+            self._chunk_step = jax.jit(
+                lambda p, c, t, s, row: prefill_step(cfg, p, c, t, s, row, attn_impl=attn_impl),
+                donate_argnums=(1,),
+            )
+            self._copy_block = jax.jit(copy_block_rows, donate_argnums=(0,))
         self._bucketed = cfg.family in BUCKETED_FAMILIES
         self.steps = 0
         self.tokens_out = 0
         self.peak_active = 0
+        self.prefill_chunks = 0
+        self.prefill_tokens = 0  # prompt tokens actually run through the model
+        self.prefix_hits = 0
+        self.prefix_partial_hits = 0
+        self.prefix_hit_tokens = 0  # prompt tokens served from cached blocks
+        self.defrag_triggers = 0
+        self._frees_seen = 0  # auto-defrag: only re-check after new frees
 
     # ------------------------------------------------------------------
     def submit(
@@ -224,7 +315,13 @@ class InferenceEngine:
             temperature=temperature,
             top_k=top_k,
         )
-        self.queue.append(req)
+        # priority-aware insert keeps the queue in admission order (online
+        # first, FCFS within each class) — no per-admission re-sort
+        if req.online:
+            idx = next((i for i, r in enumerate(self.queue) if not r.online), len(self.queue))
+            self.queue.insert(idx, req)
+        else:
+            self.queue.append(req)
         return req
 
     def _free_slots(self) -> list[int]:
@@ -255,53 +352,182 @@ class InferenceEngine:
         return self._prefill(self.params, batch)
 
     # ------------------------------------------------------------------
+    def _release_blocks(self, blocks: list[int]) -> None:
+        """Drop this request's references; the prefix index parks indexed
+        blocks in the LRU cached pool, everything else frees eagerly."""
+        if not blocks:
+            return
+        if self.prefix is not None:
+            self.prefix.release(blocks)
+        else:
+            self.allocator.free(blocks)
+
+    def _admit_chunked(self, req: Request, slot: int) -> bool:
+        """Prefix-matched, block-budgeted admission (no model call: prompt
+        chunks run inside subsequent ``step()`` prefill budgets).  Returns
+        False when the pool can't cover the request's unshared blocks."""
+        needed = blocks_needed(len(req.prompt) + req.max_new_tokens, self.block_size)
+        full, partial = self.prefix.match(req.prompt) if self.prefix else ([], None)
+        need_new = needed - len(full)
+        if self.prefix is not None:
+            # pin matched blocks first so the free-count check below can't
+            # hand them out as eviction victims
+            self.prefix.acquire(full)
+            if partial is not None:
+                self.prefix.acquire([partial.block])
+        if need_new > self.allocator.num_free:
+            if self.prefix is not None:
+                self.prefix.release(full)
+                if partial is not None:
+                    self.prefix.release([partial.block])
+            return False  # out of blocks: backpressure until frees
+        new_blocks = self.allocator.alloc(need_new)
+        req.blocks = full + new_blocks
+        matched = len(full) * self.block_size
+        if partial is not None:
+            # copy-on-write: the partially-shared block's rows move into the
+            # request's first private block; its suffix is overwritten by the
+            # first prefill chunk while the cached original stays immutable
+            self.cache = self._copy_block(
+                self.cache,
+                jnp.asarray(partial.block, jnp.int32),
+                jnp.asarray(new_blocks[0], jnp.int32),
+            )
+            self.prefix.release([partial.block])
+            matched += partial.tokens
+            self.prefix_partial_hits += 1
+        if matched:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += matched
+            req.prefix_hit_tokens = matched
+        if self.prefix is not None:
+            # registration resumes after the matched (already indexed) blocks
+            req.reg_block = len(full)
+            req.reg_parent = self.prefix.parent_hash(full)
+        req.prefill_pos = matched
+        req.prefilling = True
+        req.state = RequestState.ACTIVE
+        req.slot = slot
+        self.slots[slot] = req
+        self.pos[slot] = matched
+        # the engine table row stays null until the prompt completes, so
+        # interleaved decode steps write into the scratch null block, never
+        # into a half-prefilled request's memory
+        self._prefilling.append(req)
+        return True
+
+    def _admit_blocking(self, req: Request, slot: int) -> bool:
+        """Legacy one-shot admission: full prefill + cache graft (hybrid's
+        recurrent states, and every dense-cache family)."""
+        if self.cache_kind == "paged":
+            needed = blocks_needed(len(req.prompt) + req.max_new_tokens, self.block_size)
+            if needed > self.allocator.num_free:
+                return False  # out of blocks: backpressure until frees
+        logits, raw = self._run_prefill(req)
+        n = len(req.prompt)
+        self.prefill_chunks += 1
+        self.prefill_tokens += n
+        if self.cache_kind == "paged":
+            req.blocks = self.allocator.alloc(needed)
+            self.cache = self._graft(
+                self.cache, raw, jnp.asarray(req.blocks, jnp.int32), n, slot
+            )
+            self.tbl[slot] = make_table_row(req.blocks, self.max_blocks_per_seq)
+            self._tbl_dirty = True
+        else:
+            req_cache = decode_cache_from_prefill(
+                self.cfg, raw, seq_filled=n, decode_len=self.max_seq
+            )
+            self.cache = write_request_into_slot(self.cfg, self.cache, req_cache, slot)
+        self.pos[slot] = n
+        req.state = RequestState.ACTIVE
+        req.slot = slot
+        self.slots[slot] = req
+        # first generated token comes from the prefill logits
+        self._emit_first_token(req, logits[0])
+        return True
+
     def _admit(self) -> None:
-        """Prefill waiting requests into free capacity (online first).
+        """Admit waiting requests into free capacity (queue is maintained
+        online-first / FCFS by ``submit``).
 
         Paged: admission requires a free slot AND enough free blocks for the
-        request's worst case (prompt + max_new_tokens); when the pool is
-        exhausted admission backpressures (FCFS head-of-line) until finished
-        requests free their blocks.
+        request's worst case (prompt + max_new_tokens) minus whatever the
+        prefix cache already holds; when the pool is exhausted admission
+        backpressures (FCFS head-of-line) until finished requests free their
+        blocks.
         """
         free = self._free_slots()
-        if not free:
-            return
-        self.queue.sort(key=lambda r: (not r.online, r.submit_t))
         while free and self.queue:
             req = self.queue[0]
-            if self.cache_kind == "paged":
-                needed = blocks_needed(len(req.prompt) + req.max_new_tokens, self.block_size)
-                if needed > self.allocator.num_free:
-                    break  # out of blocks: backpressure until frees
+            slot = free[0]
+            admit = self._admit_chunked if self._chunked else self._admit_blocking
+            if not admit(req, slot):
+                break
             self.queue.pop(0)
-            slot = free.pop(0)
-            logits, raw = self._run_prefill(req)
-            n = len(req.prompt)
-            if self.cache_kind == "paged":
-                req.blocks = self.allocator.alloc(needed)
-                self.cache = self._graft(
-                    self.cache, raw, jnp.asarray(req.blocks, jnp.int32), n, slot
-                )
-                self.tbl[slot] = make_table_row(req.blocks, self.max_blocks_per_seq)
-                self._tbl_dirty = True
-            else:
-                req_cache = decode_cache_from_prefill(
-                    self.cfg, raw, seq_filled=n, decode_len=self.max_seq
-                )
-                self.cache = write_request_into_slot(self.cfg, self.cache, req_cache, slot)
-            self.pos[slot] = n
-            # first generated token comes from the prefill logits
-            self._key, sub = jax.random.split(self._key)
-            tok = int(sample_token(logits[0], req.temperature, sub, top_k=req.top_k))
-            req.generated.append(tok)
-            req.first_token_t = time.monotonic()
-            req.state = RequestState.ACTIVE
-            req.slot = slot
-            self.slots[slot] = req
-            self.tokens_out += 1
-            self._finish_if_done(req)
+            free.pop(0)
         self.peak_active = max(self.peak_active, sum(r is not None for r in self.slots))
 
+    def _emit_first_token(self, req: Request, logits) -> None:
+        self._key, sub = jax.random.split(self._key)
+        tok = int(sample_token(logits, req.temperature, sub, top_k=req.top_k))
+        req.generated.append(tok)
+        req.first_token_t = time.monotonic()
+        self.tokens_out += 1
+        self._finish_if_done(req)
+
+    # ------------------------------------------------------------------
+    def _run_chunk(self, req: Request, c: int):
+        """Run one c-token prompt chunk; returns the chunk's last logits."""
+        start = req.prefill_pos
+        toks = jnp.asarray(req.prompt[start : start + c], jnp.int32)[None]
+        row = jnp.asarray(
+            make_table_row(req.blocks, self.max_blocks_per_seq), jnp.int32
+        )[None]
+        logits, self.cache = self._chunk_step(
+            self.params, self.cache, toks, jnp.asarray([start], jnp.int32), row
+        )
+        req.prefill_pos += c
+        self.pos[req.slot] = req.prefill_pos
+        self.prefill_chunks += 1
+        self.prefill_tokens += c
+        if self.prefix is not None:
+            # index the newly-completed full prompt blocks (written above)
+            req.reg_block, req.reg_parent = self.prefix.register(
+                req.prompt,
+                req.blocks,
+                req.prefill_pos,
+                start_block=req.reg_block,
+                parent=req.reg_parent,
+            )
+        return logits
+
+    def _prefill_step(self) -> None:
+        """Spend this step's prefill token budget on the oldest admitted
+        prompts (FCFS).  ``prefill_budget <= 0`` drains every pending prompt
+        (the blocking-throughput configuration); a positive budget bounds
+        prefill work per step so decode latency stays flat while long
+        prompts stream in."""
+        budget = self.prefill_budget if self.prefill_budget > 0 else float("inf")
+        while self._prefilling and budget > 0:
+            req = self._prefilling[0]
+            remaining = len(req.prompt) - req.prefill_pos
+            take = int(min(budget, remaining))
+            logits = None
+            for c in binary_chunks(take):
+                logits = self._run_chunk(req, c)
+            budget -= take
+            if req.prefill_pos >= len(req.prompt):
+                self._prefilling.pop(0)
+                # prompt complete: publish the block table to the decode
+                # path and sample the first token from the last chunk logits
+                self.tbl[req.slot] = make_table_row(req.blocks, self.max_blocks_per_seq)
+                self._tbl_dirty = True
+                self.pos[req.slot] = len(req.prompt)
+                req.prefilling = False
+                self._emit_first_token(req, logits[0])
+
+    # ------------------------------------------------------------------
     def _finish_if_done(self, req: Request) -> None:
         if req.state != RequestState.ACTIVE:
             return
@@ -311,7 +537,7 @@ class InferenceEngine:
             slot = req.slot
             self.slots[slot] = None
             if self.cache_kind == "paged":
-                self.allocator.free(req.blocks[req.freed_blocks :])
+                self._release_blocks(req.blocks[req.freed_blocks :])
                 req.blocks = []
                 req.freed_blocks = 0
                 self.tbl[slot] = 0  # null block
@@ -331,9 +557,10 @@ class InferenceEngine:
         hold O(total) blocks where the ring holds O(window).  A block
         covering positions [i*bs, (i+1)*bs) is dead once its last position
         can no longer be attended by any future query (positions only grow):
-        (i+1)*bs - 1 <= next_pos - W.  Dead blocks return to the pool
-        mid-decode and their table entries point back at the null block (the
-        window mask already excludes those positions in both decode impls).
+        (i+1)*bs - 1 <= next_pos - W.  Dead blocks drop this request's
+        reference (shared prefix blocks stay alive for their other holders)
+        and the table entries point back at the null block (the window mask
+        already excludes those positions in both decode impls).
         """
         W = self.cfg.sliding_window
         if W <= 0:
@@ -342,10 +569,22 @@ class InferenceEngine:
         d = min((nxt - W + 1) // self.block_size, len(req.blocks))
         if d <= req.freed_blocks:
             return
-        self.allocator.free(req.blocks[req.freed_blocks : d])
+        self._release_blocks(req.blocks[req.freed_blocks : d])
         self.tbl[req.slot, req.freed_blocks : d] = 0
         req.freed_blocks = d
         self._tbl_dirty = True
+
+    def _maybe_defrag(self) -> None:
+        """Auto-defrag: sort the free list when scatter exceeds the
+        threshold, re-checked only after new frees."""
+        if self.allocator is None or self.defrag_threshold >= 1.0:
+            return
+        if self.allocator.total_frees == self._frees_seen:
+            return
+        self._frees_seen = self.allocator.total_frees
+        if self.allocator.fragmentation() > self.defrag_threshold:
+            self.allocator.defrag()
+            self.defrag_triggers += 1
 
     def _sync_tables(self) -> None:
         if self.cache_kind != "paged" or not self._tbl_dirty:
@@ -355,29 +594,43 @@ class InferenceEngine:
         self._tbl_dirty = False
 
     def step(self) -> int:
-        """One engine iteration: admit, then advance all active slots."""
+        """One engine iteration: admit, spend the prefill budget, then
+        advance all decoding slots one token."""
         self._admit()
-        active = [r for r in self.slots if r is not None]
-        if not active:
-            return 0
-        self._sync_tables()
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        for r in active:
-            tokens[r.slot, 0] = r.generated[-1]
-        pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tokens), pos)
-        self.steps += 1
+        if self._chunked:
+            self._prefill_step()
+        active = [r for r in self.slots if r is not None and not r.prefilling]
         produced = 0
-        for r in active:
-            self._key, sub = jax.random.split(self._key)
-            tok = int(sample_token(logits[r.slot], r.temperature, sub, top_k=r.top_k))
-            r.generated.append(tok)
-            self.pos[r.slot] += 1
-            produced += 1
-            self.tokens_out += 1
-            if self.cache_kind == "paged":
-                self._reclaim_window_blocks(r)
-            self._finish_if_done(r)
+        if active:
+            self._sync_tables()
+            tokens = np.zeros((self.max_batch, 1), np.int32)
+            temps = np.zeros((self.max_batch,), np.float32)
+            top_ks = np.zeros((self.max_batch,), np.int32)
+            for r in active:
+                tokens[r.slot, 0] = r.generated[-1]
+                temps[r.slot] = r.temperature
+                top_ks[r.slot] = r.top_k
+            pos = jnp.asarray(self.pos, jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tokens), pos)
+            self.steps += 1
+            # one whole-batch sampling dispatch; the all-greedy batch (the
+            # common serving default) skips the sort/categorical work
+            if all(r.temperature <= 0.0 for r in active):
+                sampled = np.asarray(jnp.argmax(logits, axis=-1))
+            else:
+                self._key, sub = jax.random.split(self._key)
+                sampled = np.asarray(
+                    sample_tokens(logits, jnp.asarray(temps), jnp.asarray(top_ks), sub)
+                )
+            for r in active:
+                r.generated.append(int(sampled[r.slot]))
+                self.pos[r.slot] += 1
+                produced += 1
+                self.tokens_out += 1
+                if self.cache_kind == "paged":
+                    self._reclaim_window_blocks(r)
+                self._finish_if_done(r)
+        self._maybe_defrag()
         return produced
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
@@ -413,8 +666,19 @@ class InferenceEngine:
             "slot_utilization": 1.0 - len(self._free_slots()) / self.max_batch,
             "peak_active": self.peak_active,
             "cache_bytes": self.cache_bytes(),
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens": self.prefill_tokens,
         }
         if self.cache_kind == "paged":
             s["block_size"] = self.block_size
+            s["defrag_triggers"] = self.defrag_triggers
+            s["evictions"] = self.allocator.evictions
             s.update({f"alloc_{k}": v for k, v in self.allocator.stats().items()})
+            if self.prefix is not None:
+                served = self.prefix_hit_tokens + self.prefill_tokens
+                s["prefix_hits"] = self.prefix_hits
+                s["prefix_partial_hits"] = self.prefix_partial_hits
+                s["prefix_hit_tokens"] = self.prefix_hit_tokens
+                s["prefix_hit_rate"] = self.prefix_hit_tokens / served if served else 0.0
+                s.update({f"prefix_{k}": v for k, v in self.prefix.stats().items()})
         return s

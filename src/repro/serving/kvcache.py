@@ -196,6 +196,22 @@ def graft_prefill_into_blocks(cfg, pool_cache, raw_cache, blocks, seq_filled: in
     return new
 
 
+def copy_block_rows(pool_cache, src, dst):
+    """Copy one physical block's K/V (and scales) to another block: the
+    copy-on-write step behind partial prefix hits.  A request that shares
+    only the leading tokens of a cached block gets the block's rows copied
+    into a private block, then overwrites from the divergence point — the
+    cached original stays immutable for its other sharers.  ``src``/``dst``
+    are scalar physical block ids; ``tbl`` and slot-dense recurrent states
+    pass through untouched."""
+    new = dict(pool_cache)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        if name in pool_cache:
+            leaf = pool_cache[name]  # (L, N, bs, ...)
+            new[name] = leaf.at[:, dst].set(jnp.take(leaf, src, axis=1))
+    return new
+
+
 def make_table_row(blocks, max_blocks_per_seq: int):
     """Pad a request's block list to a full table row (null-block padded)."""
     row = list(blocks) + [NULL_BLOCK] * (max_blocks_per_seq - len(blocks))

@@ -1,4 +1,4 @@
-"""Paged KV-cache block allocator (vLLM-style, host-side).
+"""Paged KV-cache block allocator (vLLM-style, host-side, refcounted).
 
 The engine's KV memory is a global pool of fixed-size blocks shared by every
 batch slot; a request owns ``ceil(tokens / block_size)`` physical blocks,
@@ -11,14 +11,32 @@ Physical block 0 is the **null block**: never allocated, permanently the
 target of inactive slots' block tables, so their (masked) decode writes land
 in a scratch bin instead of a live request's memory.
 
+Blocks are **refcounted** so prefix caching (``serving.prefix``) can share
+one physical block between every request whose prompt starts with the same
+token-aligned content: each sharer holds one reference, writes never touch a
+block whose positions are covered by more than one table row, and a block
+only leaves live accounting when its last reference drops.  A dropped block
+goes one of two ways:
+
+* ``free``        — eagerly back to the free list (content dead).
+* ``free_cached`` — into an **LRU cached pool**: the content is still a
+  valid prefix-cache entry, so the block is only reclaimed (oldest first,
+  ``on_evict`` notified so the prefix index unmaps it) when an allocation
+  finds the free list empty.  Cached blocks therefore count as free for
+  admission gating — they are reclaimable on demand.
+
 Blocks are position-independent (any physical block can hold any logical
 block), so "fragmentation" here is purely a locality concern: a scattered
 free list means scattered DMA reads on real hardware.  ``fragmentation()``
 reports it and ``defrag()`` sorts the free list so subsequent allocations are
-contiguous — allocation/free/defrag accounting without any copying.
+contiguous — allocation/free/defrag accounting without any copying.  (The
+cached pool is exempt: those blocks pin live content at their address.)
 """
 
 from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Optional
 
 
 class OutOfBlocks(RuntimeError):
@@ -31,16 +49,19 @@ def blocks_needed(tokens: int, block_size: int) -> int:
 
 
 class BlockAllocator:
-    def __init__(self, num_blocks: int):
+    def __init__(self, num_blocks: int, on_evict: Optional[Callable[[int], None]] = None):
         if num_blocks < 2:
             raise ValueError(f"need >= 2 blocks (1 null + 1 usable), got {num_blocks}")
         self.num_blocks = num_blocks
         # LIFO free list: freshly freed (cache-warm) blocks are reused first
         self._free = list(range(num_blocks - 1, 0, -1))
-        self._used: set[int] = set()
+        self._ref: dict[int, int] = {}  # live block -> refcount
+        self._cached: OrderedDict[int, None] = OrderedDict()  # refcount-0, LRU order
+        self.on_evict = on_evict  # called with the block id before reclaiming it
         self.peak_in_use = 0
         self.total_allocs = 0
         self.total_frees = 0
+        self.evictions = 0
 
     # -- accounting ----------------------------------------------------
     @property
@@ -50,11 +71,22 @@ class BlockAllocator:
 
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        """Blocks an ``alloc`` can hand out: truly free + evictable cached."""
+        return len(self._free) + len(self._cached)
 
     @property
     def blocks_in_use(self) -> int:
-        return len(self._used)
+        return len(self._ref)
+
+    @property
+    def num_cached(self) -> int:
+        return len(self._cached)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def is_cached(self, block: int) -> bool:
+        return block in self._cached
 
     def fragmentation(self) -> float:
         """1 - (longest contiguous free run / free blocks); 0 = fully
@@ -76,31 +108,79 @@ class BlockAllocator:
         return frag
 
     # -- alloc / free --------------------------------------------------
+    def _evict_one(self) -> int:
+        block, _ = self._cached.popitem(last=False)  # oldest entry
+        if self.on_evict is not None:
+            self.on_evict(block)
+        self.evictions += 1
+        return block
+
     def alloc(self, n: int) -> list[int]:
-        """Allocate ``n`` blocks or raise ``OutOfBlocks`` (all-or-nothing)."""
+        """Allocate ``n`` blocks (refcount 1) or raise ``OutOfBlocks``
+        (all-or-nothing).  Draws from the free list first; when it runs dry,
+        evicts the least-recently-used cached blocks."""
         if n < 0:
             raise ValueError(f"alloc({n})")
-        if n > len(self._free):
-            raise OutOfBlocks(f"need {n} blocks, {len(self._free)} free of {self.capacity}")
-        blocks = [self._free.pop() for _ in range(n)]
-        self._used.update(blocks)
+        if n > self.num_free:
+            raise OutOfBlocks(f"need {n} blocks, {self.num_free} free of {self.capacity}")
+        blocks = []
+        for _ in range(n):
+            blocks.append(self._free.pop() if self._free else self._evict_one())
+        for b in blocks:
+            self._ref[b] = 1
         self.total_allocs += n
-        self.peak_in_use = max(self.peak_in_use, len(self._used))
+        self.peak_in_use = max(self.peak_in_use, len(self._ref))
         return blocks
 
+    def incref(self, block: int) -> None:
+        """Add a reference to a live block (prefix sharing)."""
+        if block not in self._ref:
+            raise ValueError(f"incref on non-live block {block}")
+        self._ref[block] += 1
+
+    def reuse_cached(self, block: int) -> None:
+        """Revive a refcount-0 cached block into live use (prefix hit on an
+        evictable entry): removed from the LRU pool, refcount 1.  Counts as
+        an allocation so ``total_allocs == total_frees`` stays the drained-
+        engine leak check: every park in the cached pool counted a free."""
+        if block not in self._cached:
+            raise ValueError(f"block {block} is not in the cached pool")
+        del self._cached[block]
+        self._ref[block] = 1
+        self.total_allocs += 1
+        self.peak_in_use = max(self.peak_in_use, len(self._ref))
+
+    def _decref(self, block: int) -> bool:
+        if block not in self._ref:
+            raise ValueError(f"double free / foreign block {block}")
+        self._ref[block] -= 1
+        if self._ref[block] > 0:
+            return False
+        del self._ref[block]
+        return True
+
     def free(self, blocks: list[int]) -> None:
+        """Drop one reference per block; last reference returns the block to
+        the free list (content dead)."""
         for b in blocks:
-            if b not in self._used:
-                raise ValueError(f"double free / foreign block {b}")
-            self._used.remove(b)
-            self._free.append(b)
-        self.total_frees += len(blocks)
+            if self._decref(b):
+                self._free.append(b)
+                self.total_frees += 1
+
+    def free_cached(self, blocks: list[int]) -> None:
+        """Drop one reference per block; last reference parks the block in
+        the LRU cached pool (content stays matchable until evicted)."""
+        for b in blocks:
+            if self._decref(b):
+                self._cached[b] = None  # appended at the MRU end
+                self.total_frees += 1
 
     def stats(self) -> dict:
         return {
             "capacity": self.capacity,
             "blocks_in_use": self.blocks_in_use,
             "num_free": self.num_free,
+            "num_cached": self.num_cached,
             "peak_in_use": self.peak_in_use,
             "total_allocs": self.total_allocs,
             "total_frees": self.total_frees,

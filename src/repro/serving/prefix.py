@@ -1,0 +1,189 @@
+"""Prefix cache: content-addressed index over paged KV blocks.
+
+Shared system prompts dominate interactive serving traffic (every request in
+a deployment carries the same instruction header), yet a naive engine
+re-prefills that prefix per request.  This module lets admission *reuse* the
+K/V blocks of any previously-prefilled prompt prefix:
+
+* Every **full, token-aligned** block of a prefilled prompt is registered
+  under a chain hash ``h_i = H(h_{i-1}, tokens[i*bs:(i+1)*bs])`` — the hash
+  commits to the whole prefix, not just the block's own tokens, so two
+  prompts share a block only when *everything before it* matches too.
+  Token tuples are stored alongside and compared on lookup, so a Python
+  hash collision can never alias two different prefixes.
+* ``match`` walks a new prompt's chain as far as it stays indexed, then
+  looks at the *children* of the last matched node for a block whose tokens
+  extend the prompt partially — the *partial tail* case.  Full-block hits
+  are shared by refcount (copy never happens: full prompt blocks are
+  write-once); a partial hit is **copy-on-write** — the caller copies the
+  cached block's K/V rows into a freshly-allocated private block and
+  overwrites from the divergence point.
+* Matching is capped at ``len(prompt) - 1`` tokens: at least one suffix
+  token must run through the model so admission has logits to sample the
+  first generated token from.
+
+Lifecycle is refcount-driven (``serving.paged.BlockAllocator``): a matched
+block gains one reference per sharer; ``release`` routes indexed blocks to
+the allocator's LRU cached pool instead of the free list, so a prefix stays
+matchable after its last user finishes and is only evicted (``on_evict``
+unmaps it here) when an allocation actually needs the space.  Evicting a
+parent can strand still-cached children — they become unreachable for
+matching (walks start at the root) and simply age out of the LRU.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+from repro.serving.paged import BlockAllocator
+
+_ROOT = 0  # chain-hash seed
+
+
+def chain_hash(parent: int, tokens: tuple[int, ...]) -> int:
+    return hash((parent, tokens))
+
+
+class PartialHit(NamedTuple):
+    block: int  # cached physical block to copy-on-write from
+    tokens: int  # leading tokens of that block shared with the prompt
+
+
+@dataclass
+class _Entry:
+    hash: int
+    parent: int
+    tokens: tuple[int, ...]
+
+
+@dataclass
+class PrefixIndex:
+    allocator: BlockAllocator
+    block_size: int
+    by_hash: dict[int, int] = field(default_factory=dict)  # chain hash -> block
+    meta: dict[int, _Entry] = field(default_factory=dict)  # block -> entry
+    children: dict[int, list[int]] = field(default_factory=dict)  # parent hash -> blocks
+    registered: int = 0
+
+    def __post_init__(self):
+        self.allocator.on_evict = self._on_evict
+
+    def __len__(self) -> int:
+        return len(self.by_hash)
+
+    # -- lookup --------------------------------------------------------
+    def _lookup(self, parent: int, tokens: tuple[int, ...]) -> Optional[int]:
+        h = chain_hash(parent, tokens)
+        b = self.by_hash.get(h)
+        if b is None:
+            return None
+        ent = self.meta[b]
+        # verify: chain hashes are Python hashes, not cryptographic
+        if ent.parent != parent or ent.tokens != tokens:
+            return None
+        return b
+
+    def match(self, prompt: list[int]) -> tuple[list[int], Optional[PartialHit]]:
+        """Longest indexed prefix of ``prompt``: (full blocks, partial tail).
+
+        Pure lookup — takes no references; call ``acquire`` on the returned
+        blocks (and the partial source, around the COW copy) to pin them.
+        Never matches past ``len(prompt) - 1`` tokens.
+        """
+        bs = self.block_size
+        limit = len(prompt) - 1  # leave >= 1 token to prefill
+        blocks: list[int] = []
+        parent = _ROOT
+        i = 0
+        while i + bs <= limit:
+            blk = self._lookup(parent, tuple(prompt[i : i + bs]))
+            if blk is None:
+                break
+            blocks.append(blk)
+            parent = self.meta[blk].hash
+            i += bs
+        partial = None
+        best = 0
+        rem = prompt[i:limit]
+        if rem:
+            for cand in self.children.get(parent, ()):
+                toks = self.meta[cand].tokens
+                n = 0
+                while n < len(rem) and n < len(toks) and toks[n] == rem[n]:
+                    n += 1
+                if n > best:
+                    best, partial = n, PartialHit(cand, n)
+        return blocks, partial
+
+    # -- reference management -------------------------------------------
+    def acquire(self, blocks: list[int]) -> None:
+        """Pin matched blocks: revive cached (refcount-0) entries, add a
+        reference to live ones."""
+        for b in blocks:
+            if self.allocator.is_cached(b):
+                self.allocator.reuse_cached(b)
+            else:
+                self.allocator.incref(b)
+
+    def release(self, blocks: list[int]) -> None:
+        """Drop one reference per block; indexed blocks park in the LRU
+        cached pool (still matchable), unindexed ones free eagerly."""
+        cached = [b for b in blocks if b in self.meta]
+        plain = [b for b in blocks if b not in self.meta]
+        if cached:
+            self.allocator.free_cached(cached)
+        if plain:
+            self.allocator.free(plain)
+
+    def parent_hash(self, blocks: list[int]) -> int:
+        """Chain state after the given indexed prefix blocks (root if
+        empty) — seed for incremental ``register`` calls."""
+        return self.meta[blocks[-1]].hash if blocks else _ROOT
+
+    # -- registration / eviction ----------------------------------------
+    def register(
+        self,
+        prompt: list[int],
+        blocks: list[int],
+        upto: int,
+        *,
+        start_block: int = 0,
+        parent: int = _ROOT,
+    ) -> tuple[int, int]:
+        """Index the full blocks of ``prompt[:upto]`` (already written to
+        ``blocks``).  Idempotent; a hash already mapping to a *different*
+        block keeps the first mapping (the newcomer keeps a private copy).
+
+        ``start_block``/``parent`` resume the chain walk where a previous
+        call left off, so per-chunk registration costs only the newly
+        completed blocks instead of re-hashing the whole prefix; returns the
+        updated ``(start_block, parent)`` pair to pass next time."""
+        bs = self.block_size
+        for j in range(start_block, min(upto, len(prompt)) // bs):
+            toks = tuple(prompt[j * bs : (j + 1) * bs])
+            h = chain_hash(parent, toks)
+            b = blocks[j]
+            if h not in self.by_hash and b not in self.meta:
+                self.by_hash[h] = b
+                self.meta[b] = _Entry(hash=h, parent=parent, tokens=toks)
+                self.children.setdefault(parent, []).append(b)
+                self.registered += 1
+            parent = h
+            start_block = j + 1
+        return start_block, parent
+
+    def _on_evict(self, block: int) -> None:
+        ent = self.meta.pop(block, None)
+        if ent is None:
+            return
+        if self.by_hash.get(ent.hash) == block:
+            del self.by_hash[ent.hash]
+        sibs = self.children.get(ent.parent)
+        if sibs and block in sibs:
+            sibs.remove(block)
+            if not sibs:
+                del self.children[ent.parent]
+
+    def stats(self) -> dict:
+        return {"entries": len(self.by_hash), "registered": self.registered}

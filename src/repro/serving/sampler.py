@@ -1,4 +1,4 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling: greedy / temperature / top-k, scalar and batched."""
 
 from __future__ import annotations
 
@@ -15,3 +15,26 @@ def sample_token(logits: jax.Array, temperature: float, key: jax.Array, *, top_k
         vals, _ = jax.lax.top_k(logits, top_k)
         logits = jnp.where(logits < vals[-1], -jnp.inf, logits)
     return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+@jax.jit
+def sample_tokens(
+    logits: jax.Array,  # (B, V)
+    temperature: jax.Array,  # (B,) fp32; <= 0 means greedy
+    top_k: jax.Array,  # (B,) int32; <= 0 means full softmax
+    key: jax.Array,
+) -> jax.Array:
+    """Whole-batch sampler: one dispatch per engine step instead of one per
+    slot.  Per-slot temperature / top-k are data (no retrace across request
+    mixes); greedy rows take the argmax, sampling rows split ``key`` per
+    slot.  The top-k threshold is the k-th largest scaled logit — ties at
+    the threshold survive, matching ``sample_token``.  Returns (B,) int32."""
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.clip(top_k, 1, V) - 1
+    thresh = jnp.take_along_axis(srt, kth[:, None], axis=1)
+    masked = jnp.where((top_k > 0)[:, None] & (scaled < thresh), -jnp.inf, scaled)
+    sampled = jax.vmap(jax.random.categorical)(jax.random.split(key, B), masked)
+    return jnp.where(temperature <= 0.0, greedy, sampled.astype(jnp.int32))

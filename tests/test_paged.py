@@ -53,7 +53,7 @@ def test_allocator_defrag_accounting():
     a.free([b for b in blocks if b % 2 == 1])
     a.defrag()
     assert a.fragmentation() == 0.0
-    assert a.alloc(3) == sorted(a._used)  # post-defrag allocs are contiguous
+    assert a.alloc(3) == sorted(a._ref)  # post-defrag allocs are contiguous
 
 
 def test_blocks_needed():
