@@ -14,6 +14,16 @@ harness serves a reduced model through the continuous-batching engine:
   price of its suffix; the A/B reports mean TTFT and *prefill tokens
   actually computed*, cached vs uncached (the cached side must compute
   >= 2x fewer).
+* **speculative decode** — the repetitive-suffix workload (templated
+  prose / code-completion shape): prompts end in a repeated pattern, so
+  the n-gram prompt-lookup drafter can propose multiple tokens per step;
+  the draft-model arm uses the target model as its own drafter (greedy
+  self-drafting accepts every token — the structural upper bound).  The
+  A/B reports decode steps, mean accepted tokens per slot-step and the
+  acceptance rate; both speculative arms must emit **> 1 token per
+  slot-step** (the CI smoke asserts this from the JSON).  CPU wall-clock
+  is not the win here — fewer decode steps means fewer full KV-cache
+  sweeps, which is the HBM-bound cost that dominates on real hardware.
 
 Results are also written to ``benchmarks/results/llm_inference.json`` (the
 CI smoke step asserts the shared-prefix scenario parses and reports a
@@ -46,6 +56,11 @@ MAX_NEW = 12
 
 SYSTEM_PROMPT_LEN = 48  # 3 full blocks shared by every request
 UNIQUE_TAIL = 4
+
+SPEC_PATTERN = [17, 29, 11, 5]  # repetitive suffix the ngram drafter can look up
+SPEC_REQUESTS = 8
+SPEC_MAX_NEW = 24
+SPEC_K = 4
 
 
 def _drive(eng, prompts=None, *, max_new=MAX_NEW) -> dict:
@@ -107,6 +122,22 @@ def run() -> list[dict]:
         )
         shared[label] = _drive(eng, prompts, max_new=8)
 
+    # speculative decode A/B on the repetitive-suffix workload: off vs the
+    # ngram prompt-lookup drafter vs self-drafting (draft == target params,
+    # the acceptance upper bound).  Same paged engine shape throughout.
+    spec_prompts = [[200 + i] + SPEC_PATTERN * 6 for i in range(SPEC_REQUESTS)]
+    spec = {}
+    for label, kw in (
+        ("off", {}),
+        ("ngram", dict(spec_decode="ngram", spec_k=SPEC_K)),
+        ("draft", dict(spec_decode="draft", spec_k=SPEC_K, draft_cfg=cfg, draft_params=params)),
+    ):
+        eng = InferenceEngine(
+            cfg, params, max_batch=4, max_seq=MAX_SEQ, cache_kind="paged",
+            block_size=BLOCK_SIZE, **kw,
+        )
+        spec[label] = _drive(eng, spec_prompts, max_new=SPEC_MAX_NEW)
+
     rows = [
         {
             "name": "llm_inference_dense_cpu",
@@ -142,7 +173,32 @@ def run() -> list[dict]:
             ),
         }
         rows.append(row)
+    for label in ("off", "ngram", "draft"):
+        s = spec[label]
+        rows.append(
+            {
+                "name": f"llm_inference_spec_{label}_cpu",
+                "us_per_call": s["wall_s"] / max(s["decode_steps"], 1) * 1e6,
+                "decode_steps": s["decode_steps"],
+                "tokens_out": s["tokens_out"],
+                "accepted_per_step": s.get("accepted_per_step", 1.0),
+                "acceptance_rate": s.get("acceptance_rate", 0.0),
+                "derived": (
+                    f"steps={s['decode_steps']} tok={s['tokens_out']} "
+                    f"accepted_per_step={s.get('accepted_per_step', 1.0):.2f} "
+                    f"acceptance_rate={s.get('acceptance_rate', 0.0):.2f}"
+                ),
+            }
+        )
     assert ps["cache_bytes"] <= ds["cache_bytes"], "paged budget drifted above dense"
+    for label in ("ngram", "draft"):
+        assert spec[label]["accepted_per_step"] > 1.0, (
+            f"speculative ({label}) must emit > 1 token per slot-step on the "
+            f"repetitive-suffix workload: {spec[label]['accepted_per_step']:.2f}"
+        )
+        assert spec[label]["decode_steps"] < spec["off"]["decode_steps"], (
+            f"speculative ({label}) must take fewer decode steps than baseline"
+        )
     cached, uncached = shared["cached"], shared["uncached"]
     assert cached["prefill_tokens"] * 2 <= uncached["prefill_tokens"], (
         f"prefix cache must save >= 2x prefill compute on the shared-prompt mix: "

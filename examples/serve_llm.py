@@ -1,11 +1,17 @@
 """Serving example: continuous batching with online/offline QoS.
 
     PYTHONPATH=src python examples/serve_llm.py
+    PYTHONPATH=src python examples/serve_llm.py --spec-decode ngram --spec-k 4
 
 Submits a mixed stream of online (latency-sensitive) and offline (backfill)
 requests against a reduced model and prints per-request TTFT + engine stats —
-the inference usage pattern of paper §IV.F.
+the inference usage pattern of paper §IV.F.  ``--spec-decode`` turns on
+speculative decoding (the CI docs job runs this as its smoke test); the
+offline requests carry a repetitive suffix so the n-gram drafter has
+something to look up.
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -17,22 +23,38 @@ from repro.serving import InferenceEngine
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec-decode", default="off", choices=("off", "ngram", "draft"))
+    ap.add_argument("--spec-k", type=int, default=4)
+    args = ap.parse_args()
+
     cfg = reduce_for_smoke(get_config("mistral-nemo-12b"))
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    eng = InferenceEngine(cfg, params, max_batch=4, max_seq=256)
+    eng = InferenceEngine(
+        cfg, params, max_batch=4, max_seq=256,
+        spec_decode=args.spec_decode, spec_k=args.spec_k,
+    )
 
     reqs = []
     for i in range(6):
         reqs.append(eng.submit([10 + i, 20, 30], max_new_tokens=12, online=True))
     for i in range(6):
-        reqs.append(eng.submit([100 + i, 7], max_new_tokens=24, online=False, temperature=0.8))
+        prompt = [100 + i, 7] + [31, 41, 59] * 4  # repetitive suffix
+        reqs.append(eng.submit(prompt, max_new_tokens=24, online=False, temperature=0.8))
 
     eng.run_until_drained()
     for r in reqs:
         kind = "online " if r.online else "offline"
         ttft = f"{r.ttft*1e3:7.1f}ms" if r.ttft is not None else "  never admitted"
         print(f"req {r.req_id:2d} [{kind}] ttft={ttft}  tokens={r.generated[:8]}...")
-    print("engine stats:", eng.stats())
+    stats = eng.stats()
+    print("engine stats:", stats)
+    assert all(len(r.generated) > 0 for r in reqs), "a request produced no tokens"
+    if args.spec_decode != "off":
+        print(
+            f"[spec] mode={stats['spec_decode']} accepted_per_step="
+            f"{stats['accepted_per_step']:.2f} acceptance_rate={stats['acceptance_rate']:.2f}"
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative link and anchor in the markdown tree
+must resolve.
+
+    python scripts/check_docs.py
+
+Checks, stdlib-only (runs in CI's docs job before any pip install):
+
+* inline markdown links ``[text](target)`` in README.md and docs/*.md —
+  relative targets must exist on disk (external http(s)/mailto links are
+  skipped: CI must not depend on the network);
+* fragment links ``file.md#anchor`` (and in-page ``#anchor``) — the anchor
+  must match a heading in the target file under GitHub's slugification
+  (lowercase, punctuation stripped, spaces -> hyphens);
+* backticked repo paths like ``src/repro/serving/engine.py`` or
+  ``tests/test_paged.py`` — when a backtick span looks like a file path
+  with a known source extension, it must exist (documentation naming a
+  moved/deleted file is exactly the rot this job exists to catch).
+
+Exits nonzero listing every broken reference.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+# backticked spans must look like a committed file to be checked
+PATH_EXTS = (".py", ".md", ".json", ".yml", ".yaml", ".txt", ".sh")
+# gitignored output trees: docs legitimately name files that only exist
+# after a benchmark/dry run, so they can't be required on a fresh clone
+GENERATED_PREFIXES = ("benchmarks/results/",)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip formatting, lowercase, keep word chars,
+    spaces and hyphens, then spaces -> hyphens."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # unwrap links
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    slugs: dict[str, int] = {}
+    out = set()
+    for m in HEADING_RE.finditer(path.read_text()):
+        s = github_slug(m.group(1))
+        n = slugs.get(s, 0)
+        slugs[s] = n + 1
+        out.add(s if n == 0 else f"{s}-{n}")
+    return out
+
+
+def strip_fences(text: str) -> str:
+    """Remove fenced code blocks (``` ... ```): their contents are code,
+    not prose links."""
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def check_file(doc: Path) -> list[str]:
+    errors = []
+    raw = doc.read_text()
+    prose = strip_fences(raw)
+    rel = doc.relative_to(ROOT)
+
+    for m in LINK_RE.finditer(prose):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        if path_part:
+            dest = (doc.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+        else:
+            dest = doc
+        if frag:
+            if dest.suffix != ".md":
+                errors.append(f"{rel}: fragment on non-markdown target -> {target}")
+            elif frag not in anchors_of(dest):
+                errors.append(f"{rel}: missing anchor -> {target}")
+
+    for m in CODE_SPAN_RE.finditer(prose):
+        span = m.group(1).strip()
+        if " " in span or not span.endswith(PATH_EXTS) or "*" in span or "<" in span:
+            continue
+        if not re.match(r"^[\w./-]+$", span) or "/" not in span:
+            continue  # bare filenames are module talk, not repo paths
+        if span.startswith(GENERATED_PREFIXES):
+            continue
+        # docs shorthand: `serving/engine.py` means `src/repro/serving/...`
+        if not (ROOT / span).exists() and not (ROOT / "src" / "repro" / span).exists():
+            errors.append(f"{rel}: referenced path does not exist -> `{span}`")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for doc in DOC_FILES:
+        if doc.exists():
+            errors.extend(check_file(doc))
+        else:
+            errors.append(f"missing doc file: {doc.relative_to(ROOT)}")
+    if errors:
+        print(f"docs check: {len(errors)} broken reference(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_links = sum(len(LINK_RE.findall(strip_fences(d.read_text()))) for d in DOC_FILES)
+    print(f"docs check: {len(DOC_FILES)} files, {n_links} links ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

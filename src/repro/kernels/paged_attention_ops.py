@@ -5,6 +5,14 @@ Routes fp pools through the Pallas kernels (interpret mode off-TPU); int8
 pools with per-(token, head) scales fall back to the dequantizing jnp
 reference — the int8 savings are an HBM-traffic property, and on this CPU
 image both paths are emulated anyway.
+
+Dtype contract: the pool dtype selects the path, and the two must never
+mix — fp entry points raise on int8 pools (scales are required:
+``*_quantized``), and the quantized wrappers expect the exact
+``serving.kvquant`` layout (int8 ``k``/``v`` + fp32 per-(token, head)
+``k_scale``/``v_scale``).  The chunked-prefill wrappers serve both the
+prefill chunks and the speculative-decoding verify pass
+(``models.verify_step``) — same kernel, different caller.
 """
 
 from __future__ import annotations

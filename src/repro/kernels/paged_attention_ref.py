@@ -9,6 +9,12 @@ kernel avoids it).
 
 Optionally consumes int8 block pools with per-(token, head) fp32 scales (the
 ``serving.kvquant`` KIVI layout) — dequantization happens after the gather.
+
+Block-table contract (shared with the Pallas kernels): entries past a
+sequence's last live block — inactive slots, mid-prefill slots, positions
+beyond ``seq_lens`` — point at the reserved null block (id 0).  They are
+gathered like any other block and then fully masked by the position
+compare, so the null block's contents never influence an output.
 """
 
 from __future__ import annotations

@@ -12,7 +12,9 @@ prefill tokens show up in the stats; ``--prefill-budget`` bounds prompt
 tokens processed per engine step (chunked prefill interleaved with decode).
 ``--cache dense`` selects the slot-granular baseline; ``--quantize-kv``
 stores paged pools int8 (KIVI scales); ``--attn-impl pallas`` routes decode
-and prefill chunks through the paged-attention kernels.
+and prefill chunks through the paged-attention kernels; ``--spec-decode
+ngram|draft`` turns on speculative decoding with ``--spec-k`` drafted tokens
+per verify pass (see docs/serving.md for the tuning guide).
 """
 
 from __future__ import annotations
@@ -58,6 +60,16 @@ def main() -> None:
         "--prefill-budget", type=int, default=0,
         help="max prompt tokens prefilled per step (0 = unbounded)",
     )
+    ap.add_argument(
+        "--spec-decode", default="off", choices=("off", "ngram", "draft"),
+        help="speculative decoding: n-gram prompt lookup or a reduced-depth "
+        "draft model (verify pass through the chunked-prefill kernel)",
+    )
+    ap.add_argument(
+        "--spec-k", type=int, default=4,
+        help="drafted tokens scored per verify pass (reserves spec-k "
+        "positions of per-request block headroom)",
+    )
     args = ap.parse_args()
 
     cfg = reduce_for_smoke(get_config(args.arch))
@@ -78,6 +90,8 @@ def main() -> None:
         attn_impl=args.attn_impl,
         prefix_cache=False if args.no_prefix_cache else None,
         prefill_budget=args.prefill_budget,
+        spec_decode=args.spec_decode,
+        spec_k=args.spec_k,
     )
 
     rng = random.Random(args.seed)

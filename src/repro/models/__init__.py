@@ -4,7 +4,14 @@ from repro.models.initializers import (
     param_logical_axes,
     param_specs,
 )
-from repro.models.model import decode_step, forward, prefill, prefill_step, supports_chunked_prefill
+from repro.models.model import (
+    decode_step,
+    forward,
+    prefill,
+    prefill_step,
+    supports_chunked_prefill,
+    verify_step,
+)
 from repro.models.cache import (
     abstract_cache,
     cache_bytes,
@@ -25,6 +32,7 @@ __all__ = [
     "prefill",
     "prefill_step",
     "supports_chunked_prefill",
+    "verify_step",
     "abstract_cache",
     "cache_bytes",
     "init_cache",

@@ -286,6 +286,25 @@ def supports_chunked_prefill(cfg) -> bool:
     return cfg.family in CHUNKED_PREFILL_FAMILIES
 
 
+def _chunk_stack(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla"):
+    """Shared chunk runner: embed C tokens at ``start + [0, C)``, scatter
+    their K/V into the paged cache through ``tbl_row`` and attend causally
+    over the paged history.  Returns (x (B, C, D), new cache)."""
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"no chunked prefill for family {cfg.family!r} ({cfg.name})")
+    C = tokens.shape[1]
+    positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    x, _ = embed_input(cfg, params, {"tokens": tokens, "positions": positions}, sh=sh)
+    step = B.dense_block_chunk if cfg.family == "dense" else B.moe_block_chunk
+
+    def body(x, xs):
+        p_layer, c_layer = xs
+        x, nc = step(cfg, p_layer, x, c_layer, tbl_row, start, sh=sh, attn_impl=attn_impl)
+        return x, nc
+
+    return jax.lax.scan(body, x, (params["blocks"], cache))
+
+
 def prefill_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla"):
     """Process one prompt *chunk* against a paged cache.
 
@@ -309,20 +328,30 @@ def prefill_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_im
     tokens never compete for capacity), but they only coincide token-for-
     token when no token is dropped.
     """
-    if not supports_chunked_prefill(cfg):
-        raise ValueError(f"no chunked prefill for family {cfg.family!r} ({cfg.name})")
-    C = tokens.shape[1]
-    positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
-    x, _ = embed_input(cfg, params, {"tokens": tokens, "positions": positions}, sh=sh)
-    step = B.dense_block_chunk if cfg.family == "dense" else B.moe_block_chunk
-
-    def body(x, xs):
-        p_layer, c_layer = xs
-        x, nc = step(cfg, p_layer, x, c_layer, tbl_row, start, sh=sh, attn_impl=attn_impl)
-        return x, nc
-
-    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x, new_cache = _chunk_stack(cfg, params, cache, tokens, start, tbl_row, sh=sh, attn_impl=attn_impl)
     logits = lm_logits(cfg, params, x[:, -1], sh=sh)
+    return logits, new_cache
+
+
+def verify_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla"):
+    """Score C candidate tokens against a paged cache in one pass.
+
+    Same chunk machinery as ``prefill_step`` (scatter-then-attend through
+    ``kernels.paged_prefill_attention``), but returns the logits at EVERY
+    chunk position, (B, C, V) — the speculative-decoding verification pass:
+    feeding ``[last_committed, d_1, ..., d_k]`` yields the target model's
+    distribution after each drafted token, so ``sampler.spec_accept`` can
+    accept/reject the whole draft window from one model call instead of k
+    sequential ``decode_step``s.
+
+    The fed tokens' K/V is written to the cache as a side effect; the caller
+    rolls back (``serving.kvcache.truncate_block_rows``) whatever the
+    accept/reject pass does not commit.  MoE caveat as ``prefill_step``: the
+    expert-capacity limit is computed over the B*C routed batch, so chunked
+    scoring coincides with one-token decode only when capacity doesn't bind.
+    """
+    x, new_cache = _chunk_stack(cfg, params, cache, tokens, start, tbl_row, sh=sh, attn_impl=attn_impl)
+    logits = lm_logits(cfg, params, x, sh=sh)
     return logits, new_cache
 
 

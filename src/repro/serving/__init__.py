@@ -7,11 +7,13 @@ from repro.serving.kvcache import (
     graft_prefill_into_blocks,
     make_engine_cache,
     make_table_row,
+    truncate_block_rows,
     write_request_into_slot,
 )
-from repro.serving.paged import BlockAllocator, OutOfBlocks, blocks_needed
+from repro.serving.paged import BlockAllocator, OutOfBlocks, blocks_needed, truncate_blocks
 from repro.serving.prefix import PartialHit, PrefixIndex, chain_hash
-from repro.serving.sampler import sample_token, sample_tokens
+from repro.serving.sampler import sample_token, sample_tokens, spec_accept
+from repro.serving.spec_decode import DraftModel, make_draft_config, ngram_draft
 
 __all__ = [
     "InferenceEngine",
@@ -24,6 +26,11 @@ __all__ = [
     "binary_chunks",
     "blocks_needed",
     "chain_hash",
+    "truncate_blocks",
+    "spec_accept",
+    "DraftModel",
+    "make_draft_config",
+    "ngram_draft",
     "clear_block_row",
     "clear_slot",
     "copy_block_rows",
@@ -31,6 +38,7 @@ __all__ = [
     "graft_prefill_into_blocks",
     "make_engine_cache",
     "make_table_row",
+    "truncate_block_rows",
     "write_request_into_slot",
     "sample_token",
     "sample_tokens",

@@ -42,6 +42,19 @@ incremental path.  Window archs reclaim blocks that slide out of the window
 mid-decode (shared blocks just drop a reference).  ``quantize_kv=True``
 stores paged pools int8 with per-(token, head) scales (``serving.kvquant``).
 
+**Speculative decoding** (``spec_decode="ngram"|"draft"``, dense/moe paged
+only): each step drafts up to ``spec_k`` candidate tokens per slot
+(``serving.spec_decode`` — n-gram prompt lookup, or a reduced-depth draft
+model) and scores the whole window in ONE multi-query-token verify pass
+through the chunked-prefill machinery (``models.verify_step``).
+``sampler.spec_accept`` keeps the longest prefix the target distribution
+agrees with plus a correction/bonus token — exactly target-distributed,
+greedy-mode token-identical to plain decode — so a slot advances by 1 to
+``spec_k + 1`` tokens per step while paying one cache sweep.  Rejected
+tail writes are rolled back (rows zeroed, position reset); admission
+reserves ``spec_k`` positions of headroom per request so speculative writes
+always land inside the request's own blocks.
+
 Per-step sampling is one jitted whole-batch dispatch
 (``sampler.sample_tokens``) with per-slot temperature/top-k carried as data.
 The allocator's free list is auto-defragmented when ``fragmentation()``
@@ -68,10 +81,12 @@ import numpy as np
 from repro.models import (
     decode_step,
     init_paged_cache,
+    init_params,
     prefill,
     prefill_step,
     supports_chunked_prefill,
     supports_paged,
+    verify_step,
 )
 from repro.serving.kvcache import (
     clear_block_row,
@@ -81,11 +96,13 @@ from repro.serving.kvcache import (
     graft_prefill_into_blocks,
     make_engine_cache,
     make_table_row,
+    truncate_block_rows,
     write_request_into_slot,
 )
-from repro.serving.paged import BlockAllocator, blocks_needed
+from repro.serving.paged import BlockAllocator, blocks_needed, truncate_blocks
 from repro.serving.prefix import PrefixIndex
-from repro.serving.sampler import sample_token, sample_tokens
+from repro.serving.sampler import sample_token, sample_tokens, spec_accept
+from repro.serving.spec_decode import DraftModel, make_draft_config, ngram_draft
 
 # families whose prefill is exact under right-padding (causal attention:
 # pad positions can never influence earlier K/V or the last-real-token
@@ -162,6 +179,10 @@ class InferenceEngine:
         prefix_cache: Optional[bool] = None,
         prefill_budget: int = 0,
         defrag_threshold: float = 0.5,
+        spec_decode: str = "off",
+        spec_k: int = 4,
+        draft_cfg=None,
+        draft_params=None,
     ):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only; no decode serving")
@@ -217,6 +238,42 @@ class InferenceEngine:
         self.prefill_budget = prefill_budget
         self.defrag_threshold = defrag_threshold
 
+        # speculative decoding rides on the chunked verify path: the k drafted
+        # tokens are scored in one multi-query-token pass through the paged
+        # prefill-attention machinery, so it needs a paged cache + a
+        # chunk-resumable family (recurrent states can't be rolled back)
+        if spec_decode not in ("off", "ngram", "draft"):
+            raise ValueError(f"spec_decode={spec_decode!r}")
+        if spec_decode != "off" and not self._chunked:
+            warnings.warn(
+                f"spec_decode needs a paged cache and a chunk-resumable "
+                f"family (dense/moe); disabled for {cfg.name} "
+                f"({cache_kind}/{cfg.family})",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            spec_decode = "off"
+        if spec_k < 1:
+            raise ValueError(f"spec_k={spec_k} (need >= 1)")
+        self.spec_mode = spec_decode
+        self.spec_k = spec_k
+        # a verify pass writes up to spec_k positions past the committed
+        # sequence; admission reserves that headroom so speculative writes
+        # always land in the request's own blocks, never past its table row
+        self._spec_extra = spec_k if spec_decode != "off" else 0
+        self._draft: Optional[DraftModel] = None
+        if self.spec_mode == "draft":
+            dcfg = draft_cfg if draft_cfg is not None else make_draft_config(cfg)
+            if dcfg.padded_vocab != cfg.padded_vocab:
+                raise ValueError(
+                    f"draft model vocab {dcfg.padded_vocab} != target {cfg.padded_vocab}"
+                )
+            if draft_params is None:
+                draft_params = init_params(dcfg, jax.random.PRNGKey(seed + 1), jnp.float32)
+            self._draft = DraftModel(
+                dcfg, draft_params, max_batch=max_batch, max_seq=max_seq, seed=seed
+            )
+
         if cache_kind == "paged":
             self.block_size = block_size
             self.max_blocks_per_seq = -(-max_seq // block_size)
@@ -268,6 +325,15 @@ class InferenceEngine:
                 donate_argnums=(1,),
             )
             self._copy_block = jax.jit(copy_block_rows, donate_argnums=(0,))
+        if self.spec_mode != "off":
+            self._verify = jax.jit(
+                lambda p, c, t, s, row: verify_step(cfg, p, c, t, s, row, attn_impl=attn_impl),
+                donate_argnums=(1,),
+            )
+            self._trunc_rows = jax.jit(
+                lambda c, tbl, s, e: truncate_block_rows(c, tbl, s, e, span=spec_k + 1),
+                donate_argnums=(0,),
+            )
         self._bucketed = cfg.family in BUCKETED_FAMILIES
         self.steps = 0
         self.tokens_out = 0
@@ -279,6 +345,11 @@ class InferenceEngine:
         self.prefix_hit_tokens = 0  # prompt tokens served from cached blocks
         self.defrag_triggers = 0
         self._frees_seen = 0  # auto-defrag: only re-check after new frees
+        self.spec_steps = 0  # verify dispatches
+        self.spec_slot_steps = 0  # per-slot verify passes (spec stats denominator)
+        self.spec_drafted = 0  # candidate tokens proposed (valid lanes only)
+        self.spec_accepted = 0  # drafted tokens committed
+        self.spec_emitted = 0  # tokens emitted via the speculative path
 
     # ------------------------------------------------------------------
     def submit(
@@ -294,13 +365,15 @@ class InferenceEngine:
             raise ValueError("empty prompt")
         total = len(prompt) + max_new_tokens
         if self.cache_kind == "paged":
-            if total > self.max_seq:
+            span = total + self._spec_extra  # worst case + speculative headroom
+            if span > self.max_seq:
+                headroom = f" (+{self._spec_extra} spec_k headroom)" if self._spec_extra else ""
                 raise ValueError(
-                    f"prompt+max_new_tokens={total} exceeds max_seq={self.max_seq}"
+                    f"prompt+max_new_tokens={total}{headroom} exceeds max_seq={self.max_seq}"
                 )
-            if blocks_needed(total, self.block_size) > self.allocator.capacity:
+            if blocks_needed(span, self.block_size) > self.allocator.capacity:
                 raise ValueError(
-                    f"request needs {blocks_needed(total, self.block_size)} blocks, "
+                    f"request needs {blocks_needed(span, self.block_size)} blocks, "
                     f"pool capacity is {self.allocator.capacity}"
                 )
         elif self.cfg.has_attention and self.cfg.sliding_window == 0 and total > self.max_seq:
@@ -366,7 +439,9 @@ class InferenceEngine:
         """Prefix-matched, block-budgeted admission (no model call: prompt
         chunks run inside subsequent ``step()`` prefill budgets).  Returns
         False when the pool can't cover the request's unshared blocks."""
-        needed = blocks_needed(len(req.prompt) + req.max_new_tokens, self.block_size)
+        needed = blocks_needed(
+            len(req.prompt) + req.max_new_tokens + self._spec_extra, self.block_size
+        )
         full, partial = self.prefix.match(req.prompt) if self.prefix else ([], None)
         need_new = needed - len(full)
         if self.prefix is not None:
@@ -410,6 +485,8 @@ class InferenceEngine:
         req.slot = slot
         self.slots[slot] = req
         self.pos[slot] = matched
+        if self._draft is not None:
+            self._draft.reset(slot)
         # the engine table row stays null until the prompt completes, so
         # interleaved decode steps write into the scratch null block, never
         # into a half-prefilled request's memory
@@ -528,6 +605,122 @@ class InferenceEngine:
                 self._emit_first_token(req, logits[0])
 
     # ------------------------------------------------------------------
+    def _spec_step(self, active: list[Request]) -> int:
+        """One speculative engine iteration over the decoding slots.
+
+        Per slot: draft up to ``spec_k`` candidates (``ngram`` prompt lookup
+        or the draft model), score every candidate in ONE verify pass
+        (``models.verify_step`` — the chunked-prefill machinery with
+        all-position logits), accept the longest target-agreeing prefix via
+        ``sampler.spec_accept``, commit the accepted tokens' already-written
+        K/V, and roll back the rejected tail (zero the stale rows, reset the
+        position).  Slots with no draftable candidates (no n-gram match,
+        one-token budget) degrade to a plain single-token step through the
+        same pass.
+        """
+        K = self.spec_k
+        V = self.cfg.padded_vocab
+        tokens = np.zeros((self.max_batch, K + 1), np.int32)
+        drafts = np.zeros((self.max_batch, K), np.int32)
+        # draft mode carries the true proposal distributions; the ngram
+        # drafter's q is a one-hot of ``drafts`` and is built on-device
+        # below instead of materializing a dense (B, K, V) host array
+        qprobs = np.zeros((self.max_batch, K, V), np.float32) if self._draft else None
+        valid = np.zeros((self.max_batch, K), bool)
+        start = np.zeros((self.max_batch,), np.int32)
+        temps = np.zeros((self.max_batch,), np.float32)
+        top_ks = np.zeros((self.max_batch,), np.int32)
+        for r in active:
+            s = r.slot
+            ctx = r.prompt + r.generated
+            # never draft past the generation budget: at most remaining - 1
+            # drafts so the window's +1 correction/bonus stays within max_new
+            kmax = min(K, r.max_new_tokens - len(r.generated) - 1)
+            if self.spec_mode == "ngram":
+                d = ngram_draft(ctx, kmax)
+            else:
+                d, q = self._draft.draft(
+                    s, ctx, kmax, temperature=r.temperature, top_k=r.top_k
+                )
+                if d:
+                    qprobs[s, : len(d)] = q
+            tokens[s, 0] = r.generated[-1]
+            if d:
+                tokens[s, 1 : 1 + len(d)] = d
+                drafts[s, : len(d)] = d
+                valid[s, : len(d)] = True
+            start[s] = self.pos[s]
+            temps[s] = r.temperature
+            top_ks[s] = r.top_k
+            self.spec_slot_steps += 1
+            self.spec_drafted += len(d)
+        logits, self.cache = self._verify(
+            self.params,
+            self.cache,
+            jnp.asarray(tokens),
+            jnp.asarray(start),
+            jnp.asarray(self.tbl),
+        )
+        self.steps += 1
+        self.spec_steps += 1
+        self._key, sub = jax.random.split(self._key)
+        drafts_j = jnp.asarray(drafts)
+        q_j = (
+            jnp.asarray(qprobs)
+            if qprobs is not None
+            else jax.nn.one_hot(drafts_j, V, dtype=jnp.float32)
+        )
+        n_acc, final = spec_accept(
+            logits,
+            drafts_j,
+            q_j,
+            jnp.asarray(valid),
+            jnp.asarray(temps),
+            jnp.asarray(top_ks),
+            sub,
+        )
+        n_acc, final = np.asarray(n_acc), np.asarray(final)
+        produced = 0
+        t_start = np.zeros((self.max_batch,), np.int32)
+        t_end = np.zeros((self.max_batch,), np.int32)  # end <= start: no-op slot
+        for r in active:
+            s = r.slot
+            na = int(n_acc[s])
+            emitted = [int(drafts[s, i]) for i in range(na)] + [int(final[s])]
+            # stop at the first EOS inside the accepted window
+            cut = next((j + 1 for j, t in enumerate(emitted) if t == self.eos), len(emitted))
+            cut = min(cut, r.max_new_tokens - len(r.generated))
+            emitted = emitted[:cut]
+            base = int(start[s])
+            clen = len(r.prompt) + len(r.generated)  # committed ctx before this step
+            r.generated.extend(emitted)
+            self.pos[s] = base + cut
+            produced += cut
+            self.tokens_out += cut
+            self.spec_accepted += min(na, cut)
+            self.spec_emitted += cut
+            if self._draft is not None:
+                # the drafter absorbed its own provisional tokens; truncate
+                # its view to the committed prefix (divergent feeds are
+                # re-fed by the next draft call's catch-up)
+                self._draft.rollback(s, clen + min(na, cut))
+            self._finish_if_done(r)
+            if r.state != RequestState.ACTIVE:
+                continue  # blocks already truncated + released at final length
+            if cut < K + 1:
+                # mark the rejected tail for rollback: its K/V rows are
+                # zeroed so the pool never carries live-looking rows past
+                # the committed length
+                t_start[s], t_end[s] = base + cut, base + K + 1
+            self._reclaim_window_blocks(r)
+        if np.any(t_end > t_start):
+            # one whole-batch dispatch rolls back every slot's tail
+            self.cache = self._trunc_rows(
+                self.cache, jnp.asarray(self.tbl), jnp.asarray(t_start), jnp.asarray(t_end)
+            )
+        return produced
+
+    # ------------------------------------------------------------------
     def _finish_if_done(self, req: Request) -> None:
         if req.state != RequestState.ACTIVE:
             return
@@ -537,7 +730,15 @@ class InferenceEngine:
             slot = req.slot
             self.slots[slot] = None
             if self.cache_kind == "paged":
-                self._release_blocks(req.blocks[req.freed_blocks :])
+                # token-level truncate at the final committed length: tail
+                # blocks hold only rejected speculative writes or unused
+                # reserve (dead content) — plain-freed, never parked in the
+                # prefix LRU; the kept span routes through the prefix index
+                final_len = len(req.prompt) + len(req.generated)
+                kept, tail = truncate_blocks(req.blocks, final_len, self.block_size)
+                if tail:
+                    self.allocator.free(tail)
+                self._release_blocks(kept[req.freed_blocks :])
                 req.blocks = []
                 req.freed_blocks = 0
                 self.tbl[slot] = 0  # null block
@@ -601,7 +802,10 @@ class InferenceEngine:
             self._prefill_step()
         active = [r for r in self.slots if r is not None and not r.prefilling]
         produced = 0
-        if active:
+        if active and self.spec_mode != "off":
+            self._sync_tables()
+            produced = self._spec_step(active)
+        elif active:
             self._sync_tables()
             tokens = np.zeros((self.max_batch, 1), np.int32)
             temps = np.zeros((self.max_batch,), np.float32)
@@ -642,9 +846,19 @@ class InferenceEngine:
             n_queued = len(self.queue)
             n_active = sum(r is not None for r in self.slots)
             if n_queued or n_active:
+                spec = ""
+                if self.spec_mode != "off":
+                    # surface acceptance so a drafting regression (fewer
+                    # tokens/step -> more steps to drain) is visible in logs
+                    rate = self.spec_accepted / self.spec_drafted if self.spec_drafted else 0.0
+                    per = self.spec_emitted / self.spec_slot_steps if self.spec_slot_steps else 0.0
+                    spec = (
+                        f" (spec_decode={self.spec_mode}: acceptance_rate={rate:.2f}, "
+                        f"accepted_per_step={per:.2f})"
+                    )
                 warnings.warn(
                     f"run_until_drained exhausted max_steps={max_steps} with "
-                    f"{n_queued} queued and {n_active} active requests unfinished",
+                    f"{n_queued} queued and {n_active} active requests unfinished{spec}",
                     RuntimeWarning,
                     stacklevel=2,
                 )
@@ -669,6 +883,18 @@ class InferenceEngine:
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
         }
+        if self.spec_mode != "off":
+            s["spec_decode"] = self.spec_mode
+            s["spec_k"] = self.spec_k
+            s["spec_steps"] = self.spec_steps
+            s["drafted_tokens"] = self.spec_drafted
+            s["accepted_tokens"] = self.spec_accepted
+            s["acceptance_rate"] = (
+                self.spec_accepted / self.spec_drafted if self.spec_drafted else 0.0
+            )
+            s["accepted_per_step"] = (
+                self.spec_emitted / self.spec_slot_steps if self.spec_slot_steps else 0.0
+            )
         if self.cache_kind == "paged":
             s["block_size"] = self.block_size
             s["defrag_triggers"] = self.defrag_triggers

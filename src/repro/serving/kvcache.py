@@ -11,10 +11,32 @@ conv/SSM states and VLM grouped caches.
 
 Paged layout: ``graft_prefill_into_blocks`` scatters the prompt's K/V into
 the physical blocks a request was allocated (quantizing on the way in for
-int8 pools) and ``clear_block_row`` resets a freed slot's table row to the
-null block — graft/clear become block-table ops instead of cache-line
+int8 pools), ``copy_block_rows`` is the copy-on-write step behind partial
+prefix hits, ``truncate_block_rows`` zeroes a rejected speculative tail,
+and ``clear_block_row`` resets a freed slot's table row to the null block —
+graft/COW/truncate/clear become block-table ops instead of cache-line
 copies, which is exactly why freeing a paged request is O(blocks) metadata
 instead of an O(max_seq) wipe.
+
+Paged layout invariants (shared with ``models.cache`` and the
+``kernels.paged_attention*`` consumers):
+
+* Pools are stacked ``(L, num_blocks, block_size, kv_heads, head_dim)``;
+  logical position ``t`` of a request lives in physical block
+  ``tbl_row[t // block_size]`` at offset ``t % block_size``.
+* **Null rows** — table entries are ``NULL_BLOCK`` (0) wherever a slot owns
+  no block: inactive slots, mid-prefill slots (published only when the
+  prompt completes), and window-reclaimed leading blocks.  Writes through a
+  null entry land in the reserved scratch block; reads through it are
+  position-masked.
+* **Quantized pools** — ``quantize_kv`` stores ``k``/``v`` as int8 with
+  per-(token, head) fp32 scales in sibling ``k_scale``/``v_scale`` leaves
+  of shape ``(L, num_blocks, block_size, kv_heads, 1)``; every op here
+  that moves K/V rows moves the scale rows with them.
+* Rows past a request's committed position are never attended (causal /
+  window masks key on positions), so stale content after truncation is a
+  hygiene concern, not a correctness one — the ops still zero it so COW
+  copies and int8 scale reads stay canonical.
 """
 
 from __future__ import annotations
@@ -209,6 +231,40 @@ def copy_block_rows(pool_cache, src, dst):
         if name in pool_cache:
             leaf = pool_cache[name]  # (L, N, bs, ...)
             new[name] = leaf.at[:, dst].set(jnp.take(leaf, src, axis=1))
+    return new
+
+
+def truncate_block_rows(pool_cache, tbl, start, end, *, span: int):
+    """Zero the K/V (and scale) rows for logical positions [start, end) of
+    every batch slot at once — the speculative-decoding rollback.
+
+    A verify pass writes the whole draft window's K/V into each request's
+    blocks *before* accept/reject; rejected positions must not linger as
+    live-looking rows (attention masks them by position, but zeroing keeps
+    the pool canonical for copy-on-write block copies and int8 scale reads).
+
+    ``tbl``: (B, nb) int32 block table; ``start``/``end``: (B,) int32
+    per-slot truncation ranges (``end <= start`` makes a slot a no-op).
+    ``span`` is the static lane count (the engine passes ``spec_k + 1``):
+    each slot's candidate positions are ``start + [0, span)`` and lanes at
+    or past ``end`` are redirected to the null block, so their zero-write
+    is harmless scratch.  One jitted dispatch rolls back the whole batch —
+    ``start``/``end`` are traced, so one compiled truncate serves every
+    mix of rollback lengths.
+    """
+    positions = start[:, None] + jnp.arange(span, dtype=jnp.int32)[None, :]  # (B, span)
+    bs = pool_cache["k"].shape[2]
+    live = positions < end[:, None]
+    # dead lanes may index past the table; clamp — their gather is discarded
+    idx = jnp.minimum(positions // bs, tbl.shape[1] - 1)
+    phys = jnp.where(live, jnp.take_along_axis(tbl, idx, axis=1), NULL_BLOCK)
+    off = positions % bs
+    new = dict(pool_cache)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        if name in pool_cache:
+            leaf = pool_cache[name]  # (L, N, bs, ...)
+            zeros = jnp.zeros((leaf.shape[0],) + phys.shape + leaf.shape[3:], leaf.dtype)
+            new[name] = leaf.at[:, phys, off].set(zeros)
     return new
 
 

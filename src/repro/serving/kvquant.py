@@ -13,6 +13,12 @@ fuses into the score matmul's operand load.
 This module is the opt-in serving feature: ``quantize_cache`` converts a
 decode cache in place; ``attend_quantized`` is the reference consumption
 path validated against fp attention in tests/test_kvquant.py.
+
+Paged pools (``InferenceEngine(quantize_kv=True)``) use ``quantize`` at
+every write site — prefill graft, chunk scatter, decode, speculative
+verify — storing int8 ``k``/``v`` blocks with fp32 per-(token, head)
+scales in sibling ``k_scale``/``v_scale`` pool leaves; the block-table ops
+in ``serving.kvcache`` move scale rows together with their data rows.
 """
 
 from __future__ import annotations

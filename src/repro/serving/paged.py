@@ -48,6 +48,24 @@ def blocks_needed(tokens: int, block_size: int) -> int:
     return -(-max(tokens, 1) // block_size)
 
 
+def truncate_blocks(
+    blocks: list[int], tokens: int, block_size: int
+) -> tuple[list[int], list[int]]:
+    """Token-level truncate of a block list: ``(kept, tail)``.
+
+    ``kept`` covers logical positions [0, tokens); ``tail`` is every block
+    past the truncation point.  Speculative decoding uses this when a
+    request finishes mid-window: the engine reserved headroom for the draft
+    window, and any tail blocks hold only rejected speculative writes (or
+    were never written) — they are dead content that must be freed eagerly,
+    never parked in the prefix cache's LRU pool.  ``tokens <= 0`` keeps
+    nothing.
+    """
+    n = blocks_needed(tokens, block_size) if tokens > 0 else 0
+    n = min(n, len(blocks))
+    return blocks[:n], blocks[n:]
+
+
 class BlockAllocator:
     def __init__(self, num_blocks: int, on_evict: Optional[Callable[[int], None]] = None):
         if num_blocks < 2:

@@ -1,4 +1,18 @@
-"""Token sampling: greedy / temperature / top-k, scalar and batched."""
+"""Token sampling: greedy / temperature / top-k, scalar, batched, speculative.
+
+Three entry points, all consumed by ``serving.engine``:
+
+* ``sample_token``  — scalar (V,) -> token; used for admission's first token.
+* ``sample_tokens`` — whole-batch per-step sampler: per-slot temperature /
+  top-k carried as *data* so one jitted dispatch covers every request mix.
+* ``spec_accept``   — vectorised speculative accept/reject: given the target
+  model's logits at k+1 verified positions and the draft distribution each
+  drafted token was drawn from, performs the standard rejection-sampling
+  recurrence (Leviathan et al., arXiv:2211.17192) whose *combined* output law
+  is exactly the target distribution — greedy rows degenerate to "accept
+  while the draft matches the argmax", which is what makes greedy speculative
+  decode token-identical to the non-speculative engine.
+"""
 
 from __future__ import annotations
 
@@ -38,3 +52,86 @@ def sample_tokens(
     masked = jnp.where((top_k > 0)[:, None] & (scaled < thresh), -jnp.inf, scaled)
     sampled = jax.vmap(jax.random.categorical)(jax.random.split(key, B), masked)
     return jnp.where(temperature <= 0.0, greedy, sampled.astype(jnp.int32))
+
+
+def _target_probs(logits: jax.Array, temperature: jax.Array, top_k: jax.Array) -> jax.Array:
+    """(B, C, V) logits -> per-slot tempered/top-k'd probabilities.
+
+    Greedy rows (temperature <= 0) come out as one-hot argmax so the
+    rejection-sampling rule below degenerates to exact argmax comparison.
+    Top-k thresholding matches ``sample_tokens``: ties at the k-th largest
+    scaled logit survive.
+    """
+    B, C, V = logits.shape
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None, None]
+    srt = jnp.sort(scaled, axis=-1)[..., ::-1]
+    kth = jnp.clip(top_k, 1, V) - 1
+    thresh = jnp.take_along_axis(srt, jnp.broadcast_to(kth[:, None, None], (B, C, 1)), axis=-1)
+    masked = jnp.where((top_k > 0)[:, None, None] & (scaled < thresh), -jnp.inf, scaled)
+    probs = jax.nn.softmax(masked, axis=-1)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), V, dtype=probs.dtype)
+    return jnp.where((temperature <= 0.0)[:, None, None], onehot, probs)
+
+
+@jax.jit
+def spec_accept(
+    logits: jax.Array,  # (B, K+1, V) target logits at the verified positions
+    drafts: jax.Array,  # (B, K) int32 drafted tokens
+    draft_probs: jax.Array,  # (B, K, V) fp32 distribution each draft was drawn from
+    valid: jax.Array,  # (B, K) bool; False positions force-reject (no draft)
+    temperature: jax.Array,  # (B,) fp32; <= 0 means greedy
+    top_k: jax.Array,  # (B,) int32; <= 0 means full softmax
+    key: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Speculative accept/reject over a whole decode batch in one dispatch.
+
+    ``logits[:, i]`` is the target distribution *after* the i-th fed token
+    (``[last_committed, d_1, ..., d_K]``), i.e. the distribution draft
+    ``d_{i+1}`` must be judged against.  Per slot:
+
+    * draft ``d_i`` is accepted with probability ``min(1, p_i(d_i)/q_i(d_i))``
+      (greedy rows: iff ``d_i == argmax p_i``);
+    * the first rejection at position j emits one token from the residual
+      ``norm(max(p_j - q_j, 0))`` — for a force-rejected (invalid) position
+      ``q_j`` is treated as zero, i.e. a plain sample from ``p_j``;
+    * if all K drafts are accepted, a *bonus* token is sampled from the
+      (K+1)-th distribution.
+
+    The emitted sequence ``drafts[:n_acc] + [final]`` is therefore exactly
+    distributed as n_acc+1 sequential samples from the target model — and
+    bit-identical to it under greedy.  Returns ``(n_acc (B,), final (B,))``:
+    every slot always emits ``n_acc + 1`` tokens (at least one).
+    """
+    B, K1, V = logits.shape
+    K = K1 - 1
+    greedy = temperature <= 0.0
+    p = _target_probs(logits, temperature, top_k)  # (B, K+1, V)
+    argmax = jnp.argmax(logits, axis=-1)  # (B, K+1)
+
+    k_u, k_f = jax.random.split(key)
+    u = jax.random.uniform(k_u, (B, K))
+    p_draft = jnp.take_along_axis(p[:, :K], drafts[..., None], axis=-1)[..., 0]
+    q_draft = jnp.take_along_axis(draft_probs, drafts[..., None], axis=-1)[..., 0]
+    accept_sampled = u < jnp.minimum(p_draft / jnp.maximum(q_draft, 1e-20), 1.0)
+    accept_greedy = drafts == argmax[:, :K]
+    accept = valid & jnp.where(greedy[:, None], accept_greedy, accept_sampled)
+    # accepted prefix length: first rejection stops the window
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+    # the emitted correction/bonus comes from position j = n_acc
+    j = n_acc[:, None, None]
+    p_fin = jnp.take_along_axis(p, j, axis=1)[:, 0]  # (B, V)
+    q_pad = jnp.pad(draft_probs, ((0, 0), (0, 1), (0, 0)))  # q_K = 0 -> bonus from p
+    q_fin = jnp.take_along_axis(q_pad, j, axis=1)[:, 0]
+    valid_pad = jnp.pad(valid, ((0, 0), (0, 1)))
+    valid_j = jnp.take_along_axis(valid_pad, n_acc[:, None], axis=1)[:, 0]
+    q_fin = jnp.where(valid_j[:, None], q_fin, 0.0)  # forced reject: sample from p
+    resid = jnp.clip(p_fin - q_fin, 0.0, None)
+    norm = jnp.sum(resid, axis=-1, keepdims=True)
+    resid = jnp.where(norm > 0, resid / jnp.maximum(norm, 1e-20), p_fin)
+    fin_sampled = jax.vmap(jax.random.categorical)(
+        jax.random.split(k_f, B), jnp.log(jnp.maximum(resid, 1e-38))
+    )
+    fin_greedy = jnp.take_along_axis(argmax, n_acc[:, None], axis=1)[:, 0]
+    final = jnp.where(greedy, fin_greedy, fin_sampled).astype(jnp.int32)
+    return n_acc.astype(jnp.int32), final

@@ -1,0 +1,185 @@
+"""Speculative decoding: drafters for the paged serving engine.
+
+Decode is the HBM-bound hot path — every generated token re-reads the whole
+KV cache for one token of output.  Speculative decoding spends the node's
+spare FLOPs to amortise that traffic: a cheap *drafter* proposes ``k``
+candidate tokens per slot, the target model scores all of them in ONE
+multi-query-token pass through the chunked-prefill machinery
+(``models.verify_step`` -> ``kernels.paged_prefill_attention``), and
+``sampler.spec_accept`` keeps the longest prefix the target agrees with —
+plus one correction/bonus token, so a slot always advances by at least one
+token and by up to ``k + 1``.  The accept/reject rule is exact: the emitted
+token stream is distributed (greedy: bit-identical) as if the target model
+had decoded one token at a time.
+
+Two drafters, selected by the engine's ``spec_decode`` knob:
+
+* ``ngram_draft`` — self-speculative **prompt lookup** (no second model):
+  the longest recent n-gram suffix of the context is searched for an earlier
+  occurrence and the tokens that followed it are proposed.  Free to run and
+  strong on repetitive traffic (code, templated prose, long shared prompts);
+  proposes nothing when the context never repeats, which gracefully degrades
+  to plain decode.  Its draft "distribution" is a one-hot at the proposed
+  token, so the residual-sampling correction reduces to sampling from the
+  target with the draft token's mass removed.
+* ``DraftModel`` — a small same-family model (``make_draft_config``: the
+  target config at reduced depth, same tokenizer-free synthetic-token
+  vocabulary) decoded autoregressively ``k`` times per engine step.  Each
+  slot keeps a private batch=1 dense decode cache; after the target's
+  accept/reject, ``rollback`` truncates the drafter's committed length and
+  the next ``draft`` call re-feeds the divergent tokens (stale ring entries
+  hold *future* positions, so the causal mask hides them until they are
+  overwritten — the same invariant the engine's paged rollback relies on).
+
+The drafters run host-side on Python token lists (the engine's request
+state); only the draft model's decode steps are jitted device work.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache
+from repro.serving.sampler import _target_probs
+
+
+def make_draft_config(cfg, *, num_layers: Optional[int] = None):
+    """A draft config from the same family: the target config at reduced
+    depth (default: half, floor 1).  Width, heads and — critically — the
+    vocabulary are inherited, so drafted token ids are target token ids."""
+    if num_layers is None:
+        num_layers = max(cfg.num_layers // 2, 1)
+    return cfg.replace(name=f"{cfg.name}-draft{num_layers}l", num_layers=num_layers)
+
+
+def ngram_draft(
+    context: list[int],
+    k: int,
+    *,
+    max_ngram: int = 3,
+    min_ngram: int = 1,
+) -> list[int]:
+    """Prompt-lookup drafting: propose the tokens that followed the most
+    recent earlier occurrence of the longest matching suffix n-gram.
+
+    Tries suffix lengths ``max_ngram`` down to ``min_ngram``; the most
+    recent earlier occurrence of the suffix wins.  A match at position ``s``
+    witnesses period ``p = L - n - s``, and the proposal extrapolates that
+    period forward: token ``L + j`` is predicted as token ``L + j - p`` —
+    for a non-overlapping match this is exactly "the k tokens that followed
+    last time", and a run/cycle near the end proposes the whole window
+    instead of stalling at the context boundary.  Returns ``[]`` when the
+    context never repeats — the engine then takes a plain decode step.
+    """
+    L = len(context)
+    if k <= 0 or L < min_ngram + 1:
+        return []
+    for n in range(min(max_ngram, L - 1), min_ngram - 1, -1):
+        pat = context[L - n :]
+        for s in range(L - n - 1, -1, -1):
+            if context[s : s + n] == pat:
+                p = L - n - s
+                pred = list(context)
+                for _ in range(k):
+                    pred.append(pred[-p])
+                return pred[L:]
+    return []
+
+
+class DraftModel:
+    """Per-slot autoregressive drafter over private dense decode caches.
+
+    Each engine slot owns a batch=1 ring cache for the draft model (tiny —
+    the draft is a reduced-depth config).  ``draft`` first *catches up* on
+    committed context tokens the cache hasn't absorbed (at most the prompt
+    on a fresh slot, and <= 2 tokens per steady-state step: the corrected
+    final token plus possibly the never-fed last draft), then rolls the
+    draft forward ``k`` tokens, recording the distribution each one was
+    drawn from — ``sampler.spec_accept`` needs the true proposal law ``q``
+    for exact rejection sampling.
+
+    Known tradeoff: drafting is O(active_slots * k) batch=1 decode
+    dispatches per engine step (fine at smoke scale, where the draft is a
+    2-layer micro-model).  A whole-batch draft cache with per-slot
+    positions would cut that to k dispatches; it needs per-slot catch-up
+    lengths to be equalised first, so it's left for a perf pass.
+    """
+
+    def __init__(self, cfg, params, *, max_batch: int, max_seq: int, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.caches = [init_cache(cfg, 1, max_seq, jnp.float32) for _ in range(max_batch)]
+        self.lens = np.zeros((max_batch,), np.int32)  # committed tokens absorbed
+        self._decode = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q))
+        self._key = jax.random.PRNGKey(seed ^ 0x5BEC)
+
+    def reset(self, slot: int) -> None:
+        """New request in ``slot``: restart from position 0.  The stale cache
+        entries hold positions >= every future query position until they are
+        overwritten in feed order, so the causal mask hides them."""
+        self.lens[slot] = 0
+
+    def rollback(self, slot: int, committed: int) -> None:
+        """Truncate the drafter's view to ``committed`` context tokens after
+        the target's accept/reject; rejected feeds get re-fed (overwritten)
+        by the next ``draft`` call's catch-up."""
+        self.lens[slot] = min(int(self.lens[slot]), committed)
+
+    def _feed(self, slot: int, token: int, pos: int):
+        logits, self.caches[slot] = self._decode(
+            self.params,
+            self.caches[slot],
+            jnp.asarray([[token]], jnp.int32),
+            jnp.asarray([pos], jnp.int32),
+        )
+        return logits[0]
+
+    def draft(
+        self,
+        slot: int,
+        context: list[int],
+        k: int,
+        *,
+        temperature: float = 0.0,
+        top_k: int = 0,
+    ) -> tuple[list[int], np.ndarray]:
+        """Propose up to ``k`` tokens for ``slot`` given the committed
+        ``context``.  Returns ``(tokens, probs)`` with ``probs[i]`` the (V,)
+        distribution token ``i`` was drawn from (one-hot under greedy)."""
+        if k <= 0:
+            return [], np.zeros((0, 1), np.float32)
+        start = int(self.lens[slot])
+        logits = None
+        for i, t in enumerate(context[start:]):  # catch-up on committed tokens
+            logits = self._feed(slot, int(t), start + i)
+        pos = len(context)
+        self.lens[slot] = pos
+        drafts: list[int] = []
+        probs: list[np.ndarray] = []
+        temp = jnp.asarray([temperature], jnp.float32)
+        tk = jnp.asarray([top_k], jnp.int32)
+        for i in range(k):
+            if pos + i >= self.max_seq:  # draft cache is full
+                break
+            # exact rejection sampling needs q and the target's p to share
+            # one tempered/top-k rule — reuse the sampler's, don't copy it
+            q = np.asarray(_target_probs(logits[None, None], temp, tk)[0, 0], np.float32)
+            if temperature <= 0.0:
+                d = int(np.argmax(q))  # one-hot row
+            else:
+                self._key, sub = jax.random.split(self._key)
+                d = int(jax.random.categorical(sub, jnp.log(jnp.maximum(jnp.asarray(q), 1e-38))))
+            drafts.append(d)
+            probs.append(q)
+            if i < k - 1:
+                logits = self._feed(slot, d, pos + i)
+        if len(drafts) > 1:
+            # the provisional feeds past the context are rolled back by the
+            # engine after accept/reject; record only what was actually fed
+            self.lens[slot] = pos + len(drafts) - 1
+        return drafts, np.stack(probs) if probs else np.zeros((0, 1), np.float32)

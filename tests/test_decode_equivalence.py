@@ -3,10 +3,13 @@
 Validates: KV caches (incl. sliding-window ring buffers), RWKV/SSM recurrent
 states vs their chunked-parallel training forms, rope positions, VLM cross
 caches.  MoE archs use a high capacity factor so GShard token-dropping (a
-batch-composition effect, not a bug) doesn't enter the comparison.
+batch-composition effect, not a bug) doesn't enter the comparison.  The
+speculative-decoding section holds the same bar at the engine level: greedy
+speculative decode must be token-identical to the non-speculative engine.
 """
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +19,7 @@ import pytest
 from repro.config.model import reduce_for_smoke
 from repro.configs import ASSIGNED, get_config
 from repro.models import decode_step, forward, init_cache, init_params, prefill
+from repro.serving import InferenceEngine
 
 B, S = 1, 24
 
@@ -63,3 +67,41 @@ def test_sliding_window_ring_buffer():
         lg, cache = dec(params, cache, tokens[:, t : t + 1], jnp.full((B,), t, jnp.int32))
         errs.append(float(np.max(np.abs(np.asarray(lg) - np.asarray(logits_tf[:, t])))))
     assert max(errs) < 5e-4, f"ring-buffer decode diverges by {max(errs)}"
+
+
+# ---------------------------------------------------------------------------
+# speculative decode: greedy token identity at the engine level
+# ---------------------------------------------------------------------------
+
+# dense / moe take the real verify path; hybrid safely disables speculation
+# internally (recurrent states can't roll back) and must still match
+SPEC_EQUIV_ARCHS = ["olmo-1b", "qwen3-moe-235b-a22b", "hymba-1.5b"]
+
+
+@pytest.mark.parametrize("arch", SPEC_EQUIV_ARCHS)
+@pytest.mark.parametrize("mode", ["ngram", "draft"])
+def test_speculative_engine_token_identical(arch, mode):
+    cfg = reduce_for_smoke(get_config(arch))
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = [[7, 3, 9, 4] * 3 + [5], [5, 9, 12, 5, 9, 12, 2]]
+
+    def run(**kw):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            eng = InferenceEngine(
+                cfg, params, max_batch=2, max_seq=64, block_size=8,
+                cache_dtype=jnp.float32, **kw,
+            )
+            outs = []
+            for p in prompts:
+                r = eng.submit(p, max_new_tokens=6)
+                eng.run_until_drained()
+                outs.append(r.generated)
+            return outs
+
+    kw = dict(spec_decode=mode, spec_k=3)
+    if mode == "draft":
+        kw.update(draft_cfg=cfg, draft_params=params)  # self-draft: max acceptance
+    assert run(**kw) == run(), f"{arch}/{mode}: speculative decode changed greedy tokens"
