@@ -14,6 +14,16 @@ harness serves a reduced model through the continuous-batching engine:
   price of its suffix; the A/B reports mean TTFT and *prefill tokens
   actually computed*, cached vs uncached (the cached side must compute
   >= 2x fewer).
+* **tensor-parallel** (``--tp N``) — the same engine spanning N devices of
+  a ``(data=1, model=N)`` mesh, the paper's 4-way Grace-Hopper node in
+  miniature: params and paged K/V pools shard over the model axis while
+  the allocator / prefix index / block tables stay replicated host state.
+  The A/B asserts greedy TP=N output is **token-identical** to TP=1 and
+  reports global vs per-device cache bytes (the KV-capacity win of
+  spanning the node: per-device bytes drop ~1/N, so the same HBM holds an
+  N-times larger logical pool).  Results go to
+  ``benchmarks/results/llm_inference_tp.json``; on CPU force devices with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 * **speculative decode** — the repetitive-suffix workload (templated
   prose / code-completion shape): prompts end in a repeated pattern, so
   the n-gram prompt-lookup drafter can propose multiple tokens per step;
@@ -222,8 +232,76 @@ def run() -> list[dict]:
     return rows
 
 
+def run_tp(tp: int) -> list[dict]:
+    """TP=tp vs TP=1 A/B: token-identical greedy output, sharded cache bytes."""
+    from repro.launch.mesh import make_serving_mesh
+
+    cfg = reduce_for_smoke(get_config("mistral-nemo-12b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = _shared_prefix_prompts()[:8]
+
+    def drive(mesh):
+        eng = InferenceEngine(
+            cfg,
+            params,
+            max_batch=4,
+            max_seq=MAX_SEQ,
+            cache_kind="paged",
+            block_size=BLOCK_SIZE,
+            prefix_cache=True,
+            prefill_budget=32,
+            spec_decode="ngram",
+            spec_k=SPEC_K,
+            mesh=mesh,
+        )
+        t0 = time.perf_counter()
+        reqs = [eng.submit(p, max_new_tokens=MAX_NEW) for p in prompts]
+        eng.run_until_drained()
+        s = eng.stats()
+        s["wall_s"] = time.perf_counter() - t0
+        return [r.generated for r in reqs], s, eng
+
+    base_toks, base_stats, _ = drive(None)
+    tp_toks, tp_stats, eng = drive(make_serving_mesh(tp))
+    assert tp_toks == base_toks, f"TP={tp} changed greedy tokens vs TP=1"
+    assert tp_stats["cache_bytes"] == base_stats["cache_bytes"], "global bytes drifted"
+    kv_spec = str(eng.cache["k"].sharding.spec)
+    rows = [
+        {
+            "name": f"llm_inference_tp{n}_cpu",
+            "us_per_call": s["wall_s"] / max(s["decode_steps"], 1) * 1e6,
+            "tp": n,
+            "tokens_equal": True,
+            "tokens_out": s["tokens_out"],
+            "cache_bytes": s["cache_bytes"],
+            "cache_bytes_per_device": s.get("cache_bytes_per_device", s["cache_bytes"]),
+            "prefix_hit_rate": s.get("prefix_hit_rate", 0.0),
+            "accepted_per_step": s.get("accepted_per_step", 1.0),
+            "derived": (
+                f"tok={s['tokens_out']} cache_bytes={s['cache_bytes']} "
+                f"per_device={s.get('cache_bytes_per_device', s['cache_bytes'])}"
+            ),
+        }
+        for n, s in ((1, base_stats), (tp, tp_stats))
+    ]
+    rows[1]["kv_pool_spec"] = kv_spec
+    RESULTS_DIR.mkdir(exist_ok=True)
+    (RESULTS_DIR / "llm_inference_tp.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
 def main() -> None:
-    for r in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--tp", type=int, default=1,
+        help="run the tensor-parallel token-equivalence A/B at this degree "
+        "instead of the single-device scenarios",
+    )
+    args = ap.parse_args()
+    rows = run_tp(args.tp) if args.tp > 1 else run()
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
 
 

@@ -21,6 +21,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.paged_attention import paged_attention_bhd, paged_prefill_attention_bhd
 from repro.kernels.paged_attention_ref import paged_attention_ref, paged_prefill_attention_ref
@@ -30,7 +32,44 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@partial(jax.jit, static_argnames=("softcap", "window"))
+def model_axis_size(mesh) -> int:
+    """Size of the tensor-parallel ("model") axis; 1 when no mesh is active."""
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get("model", 1))
+
+
+def kernel_shardable(mesh, num_q_heads: int, num_kv_heads: int) -> bool:
+    """A Pallas call is opaque to GSPMD, so on a multi-device mesh the kernel
+    must run per-shard under ``shard_map`` on its local head slice.  That
+    requires BOTH head counts to divide the model axis (the contiguous
+    per-device q-head slice then stays aligned with its GQA kv group).
+    Callers fall back to the XLA reference path when this returns False."""
+    tp = model_axis_size(mesh)
+    if tp <= 1:
+        return True
+    return num_q_heads % tp == 0 and num_kv_heads % tp == 0
+
+
+def _tp_dispatch(mesh, kernel, ref, q_spec, num_q_heads: int, num_kv_heads: int):
+    """One TP dispatch rule for both paged kernels: per-shard ``shard_map``
+    on the local head slice when the head counts divide, else the jnp
+    reference (which GSPMD partitions freely).  ``q_spec`` is the query (and
+    output) PartitionSpec — the only thing that differs between the decode
+    (B, H, hd) and chunked-prefill (B, C, H, hd) entry points."""
+    if not kernel_shardable(mesh, num_q_heads, num_kv_heads):
+        return ref
+    pool = P(None, None, "model", None)  # every block, local head slice
+    return shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(q_spec, pool, pool, P(None, None), P(None)),
+        out_specs=q_spec,
+        check_rep=False,
+    )
+
+
+@partial(jax.jit, static_argnames=("softcap", "window", "mesh"))
 def paged_attention(
     q: jax.Array,  # (B, H, hd) current-token queries
     k_pool: jax.Array,  # (N, bs, KV, hd)
@@ -40,22 +79,29 @@ def paged_attention(
     *,
     softcap: float = 0.0,
     window: int = 0,
+    mesh=None,
 ) -> jax.Array:
     if k_pool.dtype == jnp.int8:
         raise ValueError("int8 pools need scales: use paged_attention_quantized")
-    return paged_attention_bhd(
-        q,
-        k_pool,
-        v_pool,
-        block_tables,
-        seq_lens,
+    kernel = partial(
+        paged_attention_bhd,
         softcap=softcap,
         window=window,
         interpret=not _on_tpu(),
     )
+    if model_axis_size(mesh) > 1:
+        kernel = _tp_dispatch(
+            mesh,
+            kernel,
+            partial(paged_attention_ref, softcap=softcap, window=window),
+            P(None, "model", None),
+            q.shape[1],
+            k_pool.shape[2],
+        )
+    return kernel(q, k_pool, v_pool, block_tables, seq_lens)
 
 
-@partial(jax.jit, static_argnames=("softcap", "window"))
+@partial(jax.jit, static_argnames=("softcap", "window", "mesh"))
 def paged_prefill_attention(
     q: jax.Array,  # (B, C, H, hd) chunk queries
     k_pool: jax.Array,  # (N, bs, KV, hd)
@@ -65,19 +111,26 @@ def paged_prefill_attention(
     *,
     softcap: float = 0.0,
     window: int = 0,
+    mesh=None,
 ) -> jax.Array:
     if k_pool.dtype == jnp.int8:
         raise ValueError("int8 pools need scales: use paged_prefill_attention_quantized")
-    return paged_prefill_attention_bhd(
-        q,
-        k_pool,
-        v_pool,
-        block_tables,
-        start,
+    kernel = partial(
+        paged_prefill_attention_bhd,
         softcap=softcap,
         window=window,
         interpret=not _on_tpu(),
     )
+    if model_axis_size(mesh) > 1:
+        kernel = _tp_dispatch(
+            mesh,
+            kernel,
+            partial(paged_prefill_attention_ref, softcap=softcap, window=window),
+            P(None, None, "model", None),
+            q.shape[2],
+            k_pool.shape[2],
+        )
+    return kernel(q, k_pool, v_pool, block_tables, start)
 
 
 @partial(jax.jit, static_argnames=("softcap", "window"))

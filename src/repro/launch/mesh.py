@@ -31,3 +31,24 @@ def make_mesh(cfg: MeshConfig):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many (CPU) devices exist — for tests."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(tp: int = 1):
+    """(data=1, model=tp) mesh for tensor-parallel serving.
+
+    One model instance spans ``tp`` devices — the paper's 4-way Grace-Hopper
+    node is ``tp=4``.  The serving engine shards params and paged KV pools
+    over the "model" axis; the data axis is kept (size 1) so the standard
+    sharding rule tables apply unchanged.  On CPU, force multiple host
+    devices first: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    if tp < 1:
+        raise ValueError(f"tp={tp} (need >= 1)")
+    avail = jax.device_count()
+    if tp > avail:
+        raise ValueError(
+            f"tp={tp} exceeds {avail} visible device(s); on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp} before "
+            f"importing jax"
+        )
+    return make_local_mesh(1, tp)

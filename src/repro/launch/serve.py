@@ -4,6 +4,11 @@
         --requests 12 --max-batch 4 --cache paged --block-size 16 \\
         --shared-prefix 32 --prefill-budget 16
 
+    # tensor-parallel: one model instance over 2 devices (on CPU, force
+    # host devices first)
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --tp 2
+
 Runs the paper's inference QoS class end-to-end: online requests admitted
 ahead of offline backfill, per-request TTFT, paged-pool block accounting and
 engine utilization stats.  ``--shared-prefix N`` prepends a common N-token
@@ -14,7 +19,10 @@ tokens processed per engine step (chunked prefill interleaved with decode).
 stores paged pools int8 (KIVI scales); ``--attn-impl pallas`` routes decode
 and prefill chunks through the paged-attention kernels; ``--spec-decode
 ngram|draft`` turns on speculative decoding with ``--spec-k`` drafted tokens
-per verify pass (see docs/serving.md for the tuning guide).
+per verify pass; ``--tp N`` shards params and the paged K/V pools over a
+``(data=1, model=N)`` mesh — the paper's 4-way Grace-Hopper node is
+``--tp 4`` (see docs/serving.md for the tuning guide and the
+sharded-vs-replicated state matrix).
 """
 
 from __future__ import annotations
@@ -70,15 +78,28 @@ def main() -> None:
         help="drafted tokens scored per verify pass (reserves spec-k "
         "positions of per-request block headroom)",
     )
+    ap.add_argument(
+        "--tp", type=int, default=1,
+        help="tensor-parallel degree: shard params + paged KV pools over a "
+        "(data=1, model=tp) mesh (CPU: set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N first)",
+    )
     args = ap.parse_args()
 
     cfg = reduce_for_smoke(get_config(args.arch))
     if cfg.is_encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only; no decode serving")
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.tp)
+        print(f"[serve] tensor-parallel over {args.tp} devices: {mesh}")
     params = init_params(cfg, jax.random.PRNGKey(args.seed), jnp.float32)
     eng = InferenceEngine(
         cfg,
         params,
+        mesh=mesh,
         max_batch=args.max_batch,
         max_seq=256,
         seed=args.seed,

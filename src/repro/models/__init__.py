@@ -17,6 +17,7 @@ from repro.models.cache import (
     cache_bytes,
     init_cache,
     init_paged_cache,
+    paged_cache_axes,
     paged_cache_bytes,
     stacked_cache_axes,
     supports_paged,
@@ -37,6 +38,7 @@ __all__ = [
     "cache_bytes",
     "init_cache",
     "init_paged_cache",
+    "paged_cache_axes",
     "paged_cache_bytes",
     "stacked_cache_axes",
     "supports_paged",

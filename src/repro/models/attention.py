@@ -299,6 +299,7 @@ def paged_chunk_attention(
     *,
     impl: str = "xla",
     sh=None,
+    mesh=None,
 ):
     """Chunked-prefill attention against a paged (block-pooled) KV cache.
 
@@ -317,7 +318,10 @@ def paged_chunk_attention(
     chunk itself.  ``impl="pallas"`` uses the multi-query-token
     ``kernels.paged_prefill_attention`` kernel, ``impl="xla"`` the jnp
     oracle; int8 pools quantize on the way in and take the dequantizing
-    reference.  Returns (out, new_cache) with the same keys as ``cache``.
+    reference.  ``mesh``: tensor-parallel serving mesh — the Pallas kernel
+    runs per-shard under ``shard_map`` on its local head slice (XLA
+    reference fallback when the head counts don't divide the model axis).
+    Returns (out, new_cache) with the same keys as ``cache``.
     """
     k_pool, v_pool = cache["k"], cache["v"]
     B, C, _ = x.shape
@@ -371,6 +375,7 @@ def paged_chunk_attention(
             start,
             softcap=cfg.attn_logit_softcap,
             window=cfg.sliding_window,
+            mesh=mesh,
         )
     else:
         from repro.kernels.paged_attention_ref import paged_prefill_attention_ref
@@ -396,6 +401,7 @@ def paged_decode_attention(
     *,
     impl: str = "xla",
     sh=None,
+    mesh=None,
 ):
     """Single-token decode against a paged (block-pooled) KV cache.
 
@@ -409,6 +415,8 @@ def paged_decode_attention(
     reserved null block, never a live request's memory.  Attention runs over
     the logical view [0, pos] via the block table — ``impl="pallas"`` uses the
     ``kernels.paged_attention`` gather kernel, ``impl="xla"`` the jnp oracle.
+    ``mesh``: tensor-parallel serving mesh for the Pallas path (see
+    ``paged_chunk_attention``).
 
     Returns (out, new_cache) with the same keys as ``cache``.
     """
@@ -465,6 +473,7 @@ def paged_decode_attention(
             seq_lens,
             softcap=cfg.attn_logit_softcap,
             window=cfg.sliding_window,
+            mesh=mesh,
         )
     else:
         from repro.kernels.paged_attention_ref import paged_attention_ref

@@ -36,7 +36,7 @@ def _rmsn(x, eps=1e-5):
     return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)).astype(x.dtype)
 
 
-def _decode_attn(cfg, p_attn, h, cache, pos, *, sh=None, attn_impl="xla"):
+def _decode_attn(cfg, p_attn, h, cache, pos, *, sh=None, attn_impl="xla", mesh=None):
     """Decode attention against either cache layout.
 
     Paged caches (block pools + ``tbl`` block tables) and dense slot caches
@@ -45,7 +45,7 @@ def _decode_attn(cfg, p_attn, h, cache, pos, *, sh=None, attn_impl="xla"):
     attention-cache entries).
     """
     if "tbl" in cache:
-        return paged_decode_attention(cfg, p_attn, h, cache, pos, impl=attn_impl, sh=sh)
+        return paged_decode_attention(cfg, p_attn, h, cache, pos, impl=attn_impl, sh=sh, mesh=mesh)
     a, nk, nv, npos = decode_attention(cfg, p_attn, h, cache["k"], cache["v"], cache["pos"], pos, sh=sh)
     return a, {"k": nk, "v": nv, "pos": npos}
 
@@ -97,11 +97,13 @@ def dense_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
     return x, {"k": k, "v": v}
 
 
-def dense_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla"):
+def dense_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla", mesh=None):
     """Chunked-prefill step: like ``dense_block_decode`` but for a C-token
     chunk written/attended through the request's own paged block table."""
     h = apply_norm(cfg, p["norm1"], x)
-    a, new_attn = paged_chunk_attention(cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl)
+    a, new_attn = paged_chunk_attention(
+        cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl, mesh=mesh
+    )
     if cfg.parallel_residual:
         f = ffn(cfg, p["mlp"], h, sh=sh)
         x = x + a + f
@@ -111,9 +113,9 @@ def dense_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="x
     return x, new_attn
 
 
-def dense_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla"):
+def dense_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla", mesh=None):
     h = apply_norm(cfg, p["norm1"], x)
-    a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl)
+    a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl, mesh=mesh)
     if cfg.parallel_residual:
         f = ffn(cfg, p["mlp"], h, sh=sh)
         x = x + a + f
@@ -172,11 +174,13 @@ def moe_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
     return x, {"k": k, "v": v}
 
 
-def moe_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla"):
+def moe_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla", mesh=None):
     """Chunked-prefill step for MoE blocks.  Routing sees exactly the chunk's
     tokens (no length-bucket pad tokens competing for expert capacity)."""
     h = apply_norm(cfg, p["norm1"], x)
-    a, new_attn = paged_chunk_attention(cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl)
+    a, new_attn = paged_chunk_attention(
+        cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl, mesh=mesh
+    )
     x = x + a
     h2 = apply_norm(cfg, p["norm2"], x)
     mo, _ = moe_ffn(cfg, p["moe"], h2, sh=sh)
@@ -186,9 +190,9 @@ def moe_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla
     return x, new_attn
 
 
-def moe_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla"):
+def moe_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla", mesh=None):
     h = apply_norm(cfg, p["norm1"], x)
-    a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl)
+    a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl, mesh=mesh)
     x = x + a
     h2 = apply_norm(cfg, p["norm2"], x)
     mo, _ = moe_ffn(cfg, p["moe"], h2, sh=sh)
@@ -286,9 +290,9 @@ def hybrid_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
     return x, {"k": k, "v": v, "conv": conv_state, "ssm": ssm_state}
 
 
-def hybrid_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla"):
+def hybrid_block_decode(cfg, p, x, cache, pos, *, sh=None, attn_impl="xla", mesh=None):
     h = apply_norm(cfg, p["norm1"], x)
-    a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl)
+    a, new_attn = _decode_attn(cfg, p["attn"], h, cache, pos, sh=sh, attn_impl=attn_impl, mesh=mesh)
     m, (conv_state, ssm_state) = ssm_mod.ssm_step(cfg, p["ssm"], h, cache["conv"], cache["ssm"])
     x = x + _hybrid_combine(p, a, m, x.dtype)
     x = x + ffn(cfg, p["mlp"], apply_norm(cfg, p["norm2"], x), sh=sh)

@@ -317,6 +317,33 @@ def stacked_cache_axes(cfg) -> dict:
     )
 
 
+def paged_cache_axes(cfg, *, quantized: bool = False) -> dict:
+    """Logical axes for the stacked PAGED cache (tensor-parallel serving).
+
+    The pools shard along ``kv_heads`` (the "model" mesh axis): every device
+    holds the full block pool but only its head slice of each block, so the
+    host-side block allocator / prefix index / block tables stay mesh-size
+    invariant — block ids mean the same thing on every device.  The block
+    dims (``num_blocks``, ``block_size``) are deliberately NOT sharded:
+    splitting blocks across devices would make allocation device-aware and
+    break prefix sharing.  ``tbl`` and the hybrid recurrent states are
+    replicated (slot-dense host-managed state)."""
+    if not supports_paged(cfg):
+        raise ValueError(f"no paged cache for family {cfg.family!r} ({cfg.name})")
+    pool = ("layers", None, None, "kv_heads", None)
+    ax = {"k": pool, "v": pool, "tbl": ("layers", None, None)}
+    if quantized:
+        ax["k_scale"] = pool
+        ax["v_scale"] = pool
+    if cfg.family == "hybrid":
+        # genuinely replicated (all-None, not logical-axis mapped): the
+        # engine performs host-driven per-slot surgery on these states and
+        # the documented TP contract is "recurrent state replicates"
+        ax["conv"] = ("layers", None, None, None)
+        ax["ssm"] = ("layers", None, None, None, None)
+    return ax
+
+
 def cache_bytes(cfg, B: int, seq_len: int, dtype) -> int:
     lay = stacked_cache_layout(cfg, B, seq_len, dtype)
     total = 0

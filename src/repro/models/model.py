@@ -286,7 +286,7 @@ def supports_chunked_prefill(cfg) -> bool:
     return cfg.family in CHUNKED_PREFILL_FAMILIES
 
 
-def _chunk_stack(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla"):
+def _chunk_stack(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla", mesh=None):
     """Shared chunk runner: embed C tokens at ``start + [0, C)``, scatter
     their K/V into the paged cache through ``tbl_row`` and attend causally
     over the paged history.  Returns (x (B, C, D), new cache)."""
@@ -299,13 +299,13 @@ def _chunk_stack(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_im
 
     def body(x, xs):
         p_layer, c_layer = xs
-        x, nc = step(cfg, p_layer, x, c_layer, tbl_row, start, sh=sh, attn_impl=attn_impl)
+        x, nc = step(cfg, p_layer, x, c_layer, tbl_row, start, sh=sh, attn_impl=attn_impl, mesh=mesh)
         return x, nc
 
     return jax.lax.scan(body, x, (params["blocks"], cache))
 
 
-def prefill_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla"):
+def prefill_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla", mesh=None):
     """Process one prompt *chunk* against a paged cache.
 
     tokens:  (B, C) int32 — C consecutive prompt tokens
@@ -328,12 +328,14 @@ def prefill_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_im
     tokens never compete for capacity), but they only coincide token-for-
     token when no token is dropped.
     """
-    x, new_cache = _chunk_stack(cfg, params, cache, tokens, start, tbl_row, sh=sh, attn_impl=attn_impl)
+    x, new_cache = _chunk_stack(
+        cfg, params, cache, tokens, start, tbl_row, sh=sh, attn_impl=attn_impl, mesh=mesh
+    )
     logits = lm_logits(cfg, params, x[:, -1], sh=sh)
     return logits, new_cache
 
 
-def verify_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla"):
+def verify_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla", mesh=None):
     """Score C candidate tokens against a paged cache in one pass.
 
     Same chunk machinery as ``prefill_step`` (scatter-then-attend through
@@ -350,7 +352,9 @@ def verify_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_imp
     expert-capacity limit is computed over the B*C routed batch, so chunked
     scoring coincides with one-token decode only when capacity doesn't bind.
     """
-    x, new_cache = _chunk_stack(cfg, params, cache, tokens, start, tbl_row, sh=sh, attn_impl=attn_impl)
+    x, new_cache = _chunk_stack(
+        cfg, params, cache, tokens, start, tbl_row, sh=sh, attn_impl=attn_impl, mesh=mesh
+    )
     logits = lm_logits(cfg, params, x, sh=sh)
     return logits, new_cache
 
@@ -360,7 +364,7 @@ def verify_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_imp
 # ---------------------------------------------------------------------------
 
 
-def decode_step(cfg, params, cache, token, pos, *, sh=None, attn_impl="xla"):
+def decode_step(cfg, params, cache, token, pos, *, sh=None, attn_impl="xla", mesh=None):
     """One decode step.
 
     token: (B, 1) int32 (ignored dims for audio); pos: (B,) int32 absolute
@@ -370,7 +374,9 @@ def decode_step(cfg, params, cache, token, pos, *, sh=None, attn_impl="xla"):
     the paged block-pool layout (``models.cache.init_paged_cache``) for
     dense/moe/hybrid families — the per-layer cache keys select the path.
     ``attn_impl``: "xla" | "pallas" — paged decode attention backend (dense
-    slot caches always use the jnp path).
+    slot caches always use the jnp path).  ``mesh``: tensor-parallel serving
+    mesh — the Pallas paged kernels run per-shard under ``shard_map`` on
+    their local head slice (jnp paths partition via GSPMD and ignore it).
     """
     if cfg.is_encoder_only:
         raise ValueError(f"{cfg.name} is encoder-only: no decode step")
@@ -383,7 +389,7 @@ def decode_step(cfg, params, cache, token, pos, *, sh=None, attn_impl="xla"):
 
         def body(x, xs):
             p_layer, c_layer = xs
-            x, nc = step(cfg, p_layer, x, c_layer, pos, sh=sh, attn_impl=attn_impl)
+            x, nc = step(cfg, p_layer, x, c_layer, pos, sh=sh, attn_impl=attn_impl, mesh=mesh)
             return x, nc
 
     elif fam == "ssm":
@@ -397,7 +403,9 @@ def decode_step(cfg, params, cache, token, pos, *, sh=None, attn_impl="xla"):
 
         def body(x, xs):
             p_layer, c_layer = xs
-            x, nc = B.hybrid_block_decode(cfg, p_layer, x, c_layer, pos, sh=sh, attn_impl=attn_impl)
+            x, nc = B.hybrid_block_decode(
+                cfg, p_layer, x, c_layer, pos, sh=sh, attn_impl=attn_impl, mesh=mesh
+            )
             return x, nc
 
     elif fam == "vlm":

@@ -176,6 +176,33 @@ class ShardingRules:
         specs = self.tree_specs(axes, abstract_cache_tree, mesh, self.cache_rules())
         return jax.tree.map(lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P))
 
+    def paged_cache_shardings(self, model_cfg, mesh: Mesh, abstract_cache_tree):
+        """NamedShardings for the serving engine's paged block-pool cache.
+
+        Pools partition along the kv-head ("model") axis — every device holds
+        its head slice of EVERY physical block — while block tables and the
+        hybrid recurrent states replicate, so the host-side allocator /
+        prefix index see the same block ids regardless of mesh size.  When
+        the head count doesn't divide the model axis the divisibility check
+        in ``spec_for`` falls the pool back to replicated."""
+        from repro.models import paged_cache_axes
+
+        quantized = "k_scale" in abstract_cache_tree
+        axes = paged_cache_axes(model_cfg, quantized=quantized)
+        specs = self.tree_specs(axes, abstract_cache_tree, mesh, self.cache_rules())
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P))
+
+    def logits_sharding(self, model_cfg, mesh: Mesh, ndim: int = 2) -> NamedSharding:
+        """Vocab-sharded logits spec (batch and any inner dims replicated);
+        replicated when the padded vocab doesn't divide the model axis."""
+        spec = self.spec_for(
+            (None,) * (ndim - 1) + ("vocab",),
+            (1,) * (ndim - 1) + (model_cfg.padded_vocab,),
+            mesh,
+            self.act_rules(),
+        )
+        return NamedSharding(mesh, spec)
+
     def batch_sharding(self, mesh: Mesh) -> NamedSharding:
         return NamedSharding(mesh, P(self._data_axes()))
 

@@ -63,6 +63,22 @@ exceeds ``defrag_threshold`` after frees (``defrag_triggers`` in stats).
 Online vs offline QoS (paper §IV.F): the queue is kept in admission order by
 a priority-aware insert — online requests ahead of offline backfill, FCFS
 within each class — instead of re-sorting per admission pass.
+
+**Tensor parallelism** (``mesh=``, ``parallel=``): one engine instance can
+span the devices of a ``(data=1, model=tp)`` mesh (the paper's 4-way
+Grace-Hopper node).  Params shard with the standard
+``ShardingRules.param_shardings`` rule table (heads / FFN hidden / experts /
+vocab over "model"); the paged K/V pools partition along the **kv-head**
+axis (``ShardingRules.paged_cache_shardings``) so each device holds its head
+slice of EVERY physical block — block ids are device-invariant, which keeps
+the ``BlockAllocator``, ``PrefixIndex``, block tables and the scheduler
+plain replicated host-side logic.  Decode / chunked-prefill / verify run as
+one SPMD program with explicit ``NamedSharding`` out-specs (Pallas paged
+kernels execute per-shard under ``shard_map`` on their local head slice;
+head counts that don't divide the mesh fall back to the XLA reference
+path), and the sampler/spec-accept dispatches consume the vocab-sharded
+logits directly.  TP=n greedy decode is token-identical to TP=1 (asserted
+in ``tests/test_sharded_serving.py``).
 """
 
 from __future__ import annotations
@@ -183,6 +199,8 @@ class InferenceEngine:
         spec_k: int = 4,
         draft_cfg=None,
         draft_params=None,
+        mesh=None,
+        parallel=None,
     ):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only; no decode serving")
@@ -215,6 +233,46 @@ class InferenceEngine:
                 stacklevel=2,
             )
         self.attn_impl = attn_impl
+
+        # ---- tensor parallelism: shard params over the mesh's model axis;
+        # cache shardings are attached after the cache is built below.  The
+        # rule tables come from parallel/sharding.py — serving defaults to
+        # TP-only (no FSDP: decode wants weights stationary and replicated
+        # over the size-1 data axis).
+        self.mesh = mesh
+        self._rules = None
+        self._cache_shardings = None
+        if mesh is not None:
+            from repro.config import MeshConfig, ParallelConfig
+            from repro.parallel import make_rules
+
+            missing = {"data", "model"} - set(mesh.axis_names)
+            if missing:
+                raise ValueError(
+                    f"serving mesh needs ('data', 'model') axes "
+                    f"(launch.mesh.make_serving_mesh); got {mesh.axis_names}"
+                )
+            self._rules = make_rules(
+                MeshConfig(), parallel or ParallelConfig(fsdp=False, tensor_parallel=True)
+            )
+            self.params = params = jax.device_put(
+                params, self._rules.param_shardings(cfg, mesh, params)
+            )
+            from repro.kernels.paged_attention_ops import kernel_shardable, model_axis_size
+
+            if (
+                attn_impl == "pallas"
+                and model_axis_size(mesh) > 1
+                and not kernel_shardable(mesh, cfg.num_heads, cfg.num_kv_heads)
+            ):
+                warnings.warn(
+                    f"{cfg.name}: head counts ({cfg.num_heads}/{cfg.num_kv_heads}) "
+                    f"don't divide the model axis ({model_axis_size(mesh)}); Pallas "
+                    f"paged kernels can't take a local head slice, decode runs the "
+                    f"XLA reference path",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
 
         # chunked prefill (and with it prefix caching) needs a paged cache
         # and a family whose chunk state is fully captured by written K/V
@@ -303,6 +361,16 @@ class InferenceEngine:
             self.prefix = None
             self.cache = make_engine_cache(cfg, max_batch, max_seq, cache_dtype)
 
+        if mesh is not None:
+            # pools: head-sharded; tables / recurrent states: replicated.
+            # Placing the cache up front (instead of letting the first jit
+            # decide) pins every later dispatch to the same layout.
+            if cache_kind == "paged":
+                self._cache_shardings = self._rules.paged_cache_shardings(cfg, mesh, self.cache)
+            else:
+                self._cache_shardings = self._rules.cache_shardings(cfg, mesh, self.cache)
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
+
         self.pos = np.full((max_batch,), 0, np.int32)  # next position per slot
         self.slots: list[Optional[Request]] = [None] * max_batch
         self.queue: list[Request] = []
@@ -310,7 +378,22 @@ class InferenceEngine:
         self._prefilling: list[Request] = []  # chunked: admission (FCFS) order
         self._ids = itertools.count()
         self._key = jax.random.PRNGKey(seed)
-        self._decode = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q, attn_impl=attn_impl))
+        # explicit NamedSharding out-specs under a mesh: the cache tree keeps
+        # its pinned layout across every dispatch (head-sharded pools,
+        # replicated tables) and logits come back vocab-sharded, which the
+        # jitted sampler / spec-accept consume without a gather
+        if mesh is not None:
+            logits2 = self._rules.logits_sharding(cfg, mesh, 2)
+            logits3 = self._rules.logits_sharding(cfg, mesh, 3)
+            lc_out = dict(out_shardings=(logits2, self._cache_shardings))
+            lc3_out = dict(out_shardings=(logits3, self._cache_shardings))
+            c_out = dict(out_shardings=self._cache_shardings)
+        else:
+            lc_out = lc3_out = c_out = {}
+        self._decode = jax.jit(
+            lambda p, c, t, q: decode_step(cfg, p, c, t, q, attn_impl=attn_impl, mesh=mesh),
+            **lc_out,
+        )
         self._prefill = jax.jit(lambda p, b: prefill(cfg, p, b))
         # donate the pool so admission/chunk updates touch only the request's
         # blocks in place instead of copying the whole pool per call (donation
@@ -318,21 +401,29 @@ class InferenceEngine:
         self._graft = jax.jit(
             lambda c, raw, blocks, n, slot: graft_prefill_into_blocks(cfg, c, raw, blocks, n, slot),
             donate_argnums=(0,),
+            **(c_out if cache_kind == "paged" else {}),
         )
         if self._chunked:
             self._chunk_step = jax.jit(
-                lambda p, c, t, s, row: prefill_step(cfg, p, c, t, s, row, attn_impl=attn_impl),
+                lambda p, c, t, s, row: prefill_step(
+                    cfg, p, c, t, s, row, attn_impl=attn_impl, mesh=mesh
+                ),
                 donate_argnums=(1,),
+                **lc_out,
             )
-            self._copy_block = jax.jit(copy_block_rows, donate_argnums=(0,))
+            self._copy_block = jax.jit(copy_block_rows, donate_argnums=(0,), **c_out)
         if self.spec_mode != "off":
             self._verify = jax.jit(
-                lambda p, c, t, s, row: verify_step(cfg, p, c, t, s, row, attn_impl=attn_impl),
+                lambda p, c, t, s, row: verify_step(
+                    cfg, p, c, t, s, row, attn_impl=attn_impl, mesh=mesh
+                ),
                 donate_argnums=(1,),
+                **lc3_out,
             )
             self._trunc_rows = jax.jit(
                 lambda c, tbl, s, e: truncate_block_rows(c, tbl, s, e, span=spec_k + 1),
                 donate_argnums=(0,),
+                **c_out,
             )
         self._bucketed = cfg.family in BUCKETED_FAMILIES
         self.steps = 0
@@ -340,6 +431,11 @@ class InferenceEngine:
         self.peak_active = 0
         self.prefill_chunks = 0
         self.prefill_tokens = 0  # prompt tokens actually run through the model
+        # verify-window tokens are counted SEPARATELY: the speculative verify
+        # pass rides the chunked-prefill machinery but its fed tokens are
+        # decode work, not prompt work — folding them into prefill_tokens
+        # would deflate prefix_hit_rate whenever spec_decode is on
+        self.verify_tokens = 0
         self.prefix_hits = 0
         self.prefix_partial_hits = 0
         self.prefix_hit_tokens = 0  # prompt tokens served from cached blocks
@@ -654,6 +750,7 @@ class InferenceEngine:
             top_ks[s] = r.top_k
             self.spec_slot_steps += 1
             self.spec_drafted += len(d)
+            self.verify_tokens += K + 1  # fed window: last committed + K lanes
         logits, self.cache = self._verify(
             self.params,
             self.cache,
@@ -791,7 +888,13 @@ class InferenceEngine:
         if self.cache_kind != "paged" or not self._tbl_dirty:
             return
         L = self.cache["tbl"].shape[0]
-        self.cache["tbl"] = jnp.broadcast_to(jnp.asarray(self.tbl)[None], (L,) + self.tbl.shape)
+        tbl = np.broadcast_to(self.tbl[None], (L,) + self.tbl.shape)
+        if self.mesh is not None:
+            # commit the replicated layout up front so the host-side update
+            # never changes the compiled dispatch's input sharding signature
+            self.cache["tbl"] = jax.device_put(tbl, self._cache_shardings["tbl"])
+        else:
+            self.cache["tbl"] = jnp.asarray(tbl)
         self._tbl_dirty = False
 
     def step(self) -> int:
@@ -865,15 +968,39 @@ class InferenceEngine:
         return self.done
 
     # ------------------------------------------------------------------
-    def cache_bytes(self) -> int:
-        """Device bytes held by the engine's KV cache (pools + tables)."""
-        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(self.cache))
+    def cache_bytes(self, *, per_device: bool = False) -> int:
+        """Device bytes held by the engine's KV cache (pools + tables).
+
+        Global (logical) bytes by default — mesh-size invariant, so capacity
+        planning reads the same number under TP=1 and TP=n.  ``per_device``
+        instead sums each leaf's addressable shard: head-sharded pools count
+        ``global / tp``, replicated tables count in full."""
+        total = 0
+        for l in jax.tree.leaves(self.cache):
+            shape = l.sharding.shard_shape(l.shape) if per_device else l.shape
+            total += int(np.prod(shape, dtype=np.int64)) * l.dtype.itemsize
+        return total
 
     def stats(self) -> dict:
+        """Engine counters (see docs/serving.md for the glossary).
+
+        ``mean_ttft_s`` is computed over FINISHED requests only and
+        ``requests_queued`` / ``requests_active`` / ``requests_prefilling``
+        report the population still in flight — a drained-with-truncation run
+        (``run_until_drained`` hit ``max_steps``) is distinguishable from a
+        finished one without parsing warnings.  The four populations
+        PARTITION the submitted requests (``requests_active`` counts
+        decoding slots only; a mid-prefill slot counts under
+        ``requests_prefilling``), so ``done + queued + active + prefilling``
+        equals every request ever submitted.
+        """
         ttfts = [r.ttft for r in self.done if r.ttft is not None]
         s = {
             "cache_kind": self.cache_kind,
             "requests_done": len(self.done),
+            "requests_queued": len(self.queue),
+            "requests_active": sum(r is not None and not r.prefilling for r in self.slots),
+            "requests_prefilling": len(self._prefilling),
             "decode_steps": self.steps,
             "tokens_out": self.tokens_out,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
@@ -883,10 +1010,14 @@ class InferenceEngine:
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
         }
+        if self.mesh is not None:
+            s["tp"] = int(self.mesh.shape.get("model", 1))
+            s["cache_bytes_per_device"] = self.cache_bytes(per_device=True)
         if self.spec_mode != "off":
             s["spec_decode"] = self.spec_mode
             s["spec_k"] = self.spec_k
             s["spec_steps"] = self.spec_steps
+            s["verify_tokens"] = self.verify_tokens
             s["drafted_tokens"] = self.spec_drafted
             s["accepted_tokens"] = self.spec_accepted
             s["acceptance_rate"] = (
@@ -901,6 +1032,11 @@ class InferenceEngine:
             s["evictions"] = self.allocator.evictions
             s.update({f"alloc_{k}": v for k, v in self.allocator.stats().items()})
             if self.prefix is not None:
+                # denominator = prompt tokens only: `prefill_tokens` is
+                # incremented solely by prompt chunks / blocking prefills,
+                # never by spec-decode verify windows (those accrue to
+                # `verify_tokens`), so the hit rate is invariant to
+                # spec_decode — regression-tested in tests/test_spec_decode.py
                 served = self.prefix_hit_tokens + self.prefill_tokens
                 s["prefix_hits"] = self.prefix_hits
                 s["prefix_partial_hits"] = self.prefix_partial_hits

@@ -37,6 +37,11 @@ Paged layout invariants (shared with ``models.cache`` and the
   window masks key on positions), so stale content after truncation is a
   hygiene concern, not a correctness one — the ops still zero it so COW
   copies and int8 scale reads stay canonical.
+* Every op here indexes blocks/rows along the **unsharded** pool dims
+  (block id, block offset, batch slot) and treats heads as payload, so
+  under tensor-parallel serving (pools head-sharded, tables replicated)
+  graft / COW / truncate partition trivially via GSPMD — the engine pins
+  their jitted outputs to the cache's ``NamedSharding`` tree.
 """
 
 from __future__ import annotations

@@ -11,6 +11,12 @@ Physical block 0 is the **null block**: never allocated, permanently the
 target of inactive slots' block tables, so their (masked) decode writes land
 in a scratch bin instead of a live request's memory.
 
+The allocator is deliberately oblivious to device meshes: under
+tensor-parallel serving the pools shard along the **kv-head** axis (every
+device holds its head slice of every block), so block ids — and with them
+every alloc/free/refcount decision here — are device-invariant.  Allocator
+state never needs sharding, mirroring, or per-device reconciliation.
+
 Blocks are **refcounted** so prefix caching (``serving.prefix``) can share
 one physical block between every request whose prompt starts with the same
 token-aligned content: each sharer holds one reference, writes never touch a

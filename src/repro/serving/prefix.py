@@ -21,6 +21,10 @@ K/V blocks of any previously-prefilled prompt prefix:
 * Matching is capped at ``len(prompt) - 1`` tokens: at least one suffix
   token must run through the model so admission has logits to sample the
   first generated token from.
+* The index keys on *tokens and block ids only* — under tensor-parallel
+  serving the pools are head-sharded but block ids stay device-invariant,
+  so one replicated host-side index serves the whole mesh unchanged
+  (counters are asserted mesh-invariant in ``tests/test_sharded_serving.py``).
 
 Lifecycle is refcount-driven (``serving.paged.BlockAllocator``): a matched
 block gains one reference per sharer; ``release`` routes indexed blocks to

@@ -42,10 +42,18 @@ def sample_tokens(
     slot.  Per-slot temperature / top-k are data (no retrace across request
     mixes); greedy rows take the argmax, sampling rows split ``key`` per
     slot.  The top-k threshold is the k-th largest scaled logit — ties at
-    the threshold survive, matching ``sample_token``.  Returns (B,) int32."""
+    the threshold survive, matching ``sample_token``.  Returns (B,) int32.
+
+    Greedy rows (``temperature <= 0``) still flow through the sampled branch
+    before ``jnp.where`` discards it, so they are scaled by a BENIGN
+    temperature of 1.0 rather than the 1e-6 clamp: dividing large logits by
+    1e-6 overflows fp32 to inf inside sort/categorical, and inf/NaN garbage
+    in discarded lanes poisons debug_nans runs (and any backend that traps
+    on non-finite intermediates)."""
     B, V = logits.shape
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    safe_t = jnp.where(temperature <= 0.0, 1.0, jnp.maximum(temperature, 1e-6))
+    scaled = logits / safe_t[:, None]
     srt = jnp.sort(scaled, axis=-1)[:, ::-1]
     kth = jnp.clip(top_k, 1, V) - 1
     thresh = jnp.take_along_axis(srt, kth[:, None], axis=1)
@@ -58,12 +66,15 @@ def _target_probs(logits: jax.Array, temperature: jax.Array, top_k: jax.Array) -
     """(B, C, V) logits -> per-slot tempered/top-k'd probabilities.
 
     Greedy rows (temperature <= 0) come out as one-hot argmax so the
-    rejection-sampling rule below degenerates to exact argmax comparison.
-    Top-k thresholding matches ``sample_tokens``: ties at the k-th largest
-    scaled logit survive.
+    rejection-sampling rule below degenerates to exact argmax comparison —
+    they are scaled by a benign temperature of 1.0 first (not the 1e-6
+    clamp) so extreme logits can't overflow to inf/NaN in the discarded
+    softmax lanes (see ``sample_tokens``).  Top-k thresholding matches
+    ``sample_tokens``: ties at the k-th largest scaled logit survive.
     """
     B, C, V = logits.shape
-    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None, None]
+    safe_t = jnp.where(temperature <= 0.0, 1.0, jnp.maximum(temperature, 1e-6))
+    scaled = logits / safe_t[:, None, None]
     srt = jnp.sort(scaled, axis=-1)[..., ::-1]
     kth = jnp.clip(top_k, 1, V) - 1
     thresh = jnp.take_along_axis(srt, jnp.broadcast_to(kth[:, None, None], (B, C, 1)), axis=-1)

@@ -12,6 +12,14 @@ token and by up to ``k + 1``.  The accept/reject rule is exact: the emitted
 token stream is distributed (greedy: bit-identical) as if the target model
 had decoded one token at a time.
 
+Under tensor-parallel serving the verify pass runs as one SPMD dispatch
+(sharded pools, vocab-sharded logits into ``sampler.spec_accept``) while
+both drafters stay host-side/replicated: ``ngram_draft`` is pure Python
+over token lists, and the ``DraftModel``'s per-slot batch=1 caches are
+small enough that sharding them would cost more in collectives than it
+saves — drafting is device-invariant, so acceptance statistics match TP=1
+exactly.
+
 Two drafters, selected by the engine's ``spec_decode`` knob:
 
 * ``ngram_draft`` — self-speculative **prompt lookup** (no second model):

@@ -71,7 +71,11 @@ def test_eos_stops_generation(setup):
 
 def test_never_admitted_request_has_none_ttft(setup):
     """A queued-but-never-admitted request must report ttft=None (the serve
-    CLI guards its ms formatting on this)."""
+    CLI guards its ms formatting on this), and a truncated drain must be
+    distinguishable from a finished one in ``stats()``: ``mean_ttft_s`` /
+    ``slot_utilization`` only describe the finished/current population, so
+    the queued/active counts carry the truncation evidence into benchmark
+    JSON."""
     cfg, params = setup
     eng = InferenceEngine(cfg, params, max_batch=1, max_seq=64)
     first = eng.submit([1, 2, 3], max_new_tokens=30)
@@ -80,3 +84,85 @@ def test_never_admitted_request_has_none_ttft(setup):
         eng.run_until_drained(max_steps=2)
     assert first.ttft is not None
     assert starved.ttft is None and starved.state == RequestState.WAITING
+    s = eng.stats()
+    # truncated run: one request still decoding in its slot, one never left
+    # the queue — requests_done alone would under-report the workload
+    assert s["requests_done"] == 0
+    assert s["requests_active"] == 1
+    assert s["requests_queued"] == 1
+    assert s["mean_ttft_s"] is None  # no finished requests to average over
+    assert s["requests_done"] + s["requests_active"] + s["requests_queued"] == 2
+    eng.run_until_drained()
+    s = eng.stats()
+    assert s["requests_done"] == 2
+    assert s["requests_active"] == 0 and s["requests_queued"] == 0
+    assert s["mean_ttft_s"] is not None
+
+
+def test_stats_populations_partition_mid_prefill(setup):
+    """A slot still chunk-prefilling counts under ``requests_prefilling``,
+    NOT ``requests_active`` — the four populations must partition the
+    submitted requests or benchmark consumers double-count."""
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, max_batch=1, max_seq=64, prefill_budget=4)
+    eng.submit(list(range(2, 26)), max_new_tokens=4)  # 24-token prompt, 4/step
+    eng.submit([30, 31], max_new_tokens=4)
+    with pytest.warns(RuntimeWarning):
+        eng.run_until_drained(max_steps=2)  # truncates mid-prefill
+    s = eng.stats()
+    assert s["requests_prefilling"] == 1
+    assert s["requests_active"] == 0  # mid-prefill slot is not decoding
+    assert s["requests_queued"] == 1
+    assert (
+        s["requests_done"] + s["requests_queued"] + s["requests_active"] + s["requests_prefilling"]
+        == 2
+    )
+
+
+def test_sample_tokens_greedy_extreme_logits():
+    """Greedy rows (temperature <= 0) must never route extreme logits
+    through the 1e-6 temperature clamp: ``logits / 1e-6`` overflows fp32 to
+    inf inside the sampled branch (sort / categorical) before ``jnp.where``
+    discards it.  The safe-select keeps every intermediate finite and the
+    greedy result exactly argmax."""
+    from repro.serving.sampler import sample_tokens
+
+    V = 16
+    big = np.full((V,), -3.0e38, np.float32)
+    big[7] = 3.0e38  # near-fp32-max spread: naive 1e6 scaling overflows
+    logits = jnp.asarray(np.stack([big, np.roll(big, 3), np.linspace(-1, 1, V, dtype=np.float32)]))
+    temps = jnp.asarray([0.0, -1.0, 0.7])  # two greedy rows, one sampled
+    top_ks = jnp.asarray([0, 5, 3], jnp.int32)
+    out = np.asarray(sample_tokens(logits, temps, top_ks, jax.random.PRNGKey(0)))
+    assert out[0] == 7 and out[1] == 10, out
+    assert 0 <= out[2] < V
+    # all-greedy batch with the same extreme logits: still exact argmax
+    out2 = np.asarray(
+        sample_tokens(logits, jnp.zeros((3,)), jnp.zeros((3,), jnp.int32), jax.random.PRNGKey(1))
+    )
+    assert list(out2) == [int(np.argmax(np.asarray(l))) for l in logits]
+
+
+def test_spec_accept_greedy_extreme_logits():
+    """The verify-path twin of the sampler fix: greedy rows in
+    ``spec_accept`` scale by a benign temperature so near-fp32-max logits
+    can't produce inf/NaN in the (discarded) softmax lanes, and the greedy
+    accept rule stays exact argmax-prefix comparison."""
+    from repro.serving.sampler import _target_probs, spec_accept
+
+    B, K, V = 1, 2, 8
+    logits = np.full((B, K + 1, V), -3.0e38, np.float32)
+    argmaxes = [2, 5, 1]
+    for i, a in enumerate(argmaxes):
+        logits[0, i, a] = 3.0e38
+    logits = jnp.asarray(logits)
+    temps = jnp.zeros((B,))
+    top_ks = jnp.zeros((B,), jnp.int32)
+    p = np.asarray(_target_probs(logits, temps, top_ks))
+    assert np.isfinite(p).all(), "greedy _target_probs produced non-finite probs"
+    drafts = jnp.asarray([[2, 5]], jnp.int32)  # matches argmax prefix
+    q = jax.nn.one_hot(drafts, V, dtype=jnp.float32)
+    n_acc, final = spec_accept(
+        logits, drafts, q, jnp.ones((B, K), bool), temps, top_ks, jax.random.PRNGKey(0)
+    )
+    assert int(n_acc[0]) == K and int(final[0]) == 1

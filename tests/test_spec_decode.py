@@ -276,6 +276,34 @@ def test_spec_with_prefix_cache_and_chunked_prefill():
     assert s["prefix_hit_tokens"] >= 2 * 16  # sharing still happened
 
 
+def test_verify_tokens_do_not_deflate_prefix_hit_rate():
+    """The speculative verify pass rides the chunked-prefill machinery, so
+    a mis-wired counter would fold its fed windows into ``prefill_tokens``
+    and deflate ``prefix_hit_rate`` whenever spec decode is on.  Audit
+    result, pinned here: verify work accrues to the separate
+    ``verify_tokens`` stat, ``prefill_tokens`` counts exactly the prompt
+    tokens the model computed, and the hit rate matches the spec-off run."""
+    cfg, params = _make("olmo-1b")
+    sysp = [7, 3, 9, 4, 11, 2, 6, 8, 13, 5, 10, 12, 14, 15, 16, 17]
+    # repetitive tails so the ngram drafter actually proposes (verify windows
+    # run hot while the shared 16-token prefix is served from cache)
+    prompts = [sysp + [30 + i, 40, 41, 40, 41, 40, 41] for i in range(3)]
+    _, s_off = _run_engine(cfg, params, prompts, prefix_cache=True, prefill_budget=4)
+    _, s_on = _run_engine(
+        cfg, params, prompts,
+        prefix_cache=True, prefill_budget=4, spec_decode="ngram", spec_k=4,
+    )
+    assert s_on["spec_steps"] > 0 and s_on["verify_tokens"] > 0
+    # every prompt token is either computed (prefill) or served from cache —
+    # verify windows must appear in neither bucket
+    total_prompt = sum(len(p) for p in prompts)
+    for s in (s_off, s_on):
+        assert s["prefill_tokens"] + s["prefix_hit_tokens"] == total_prompt, s
+    assert s_on["prefill_tokens"] == s_off["prefill_tokens"]
+    assert s_on["prefix_hit_rate"] == s_off["prefix_hit_rate"] > 0
+    assert "verify_tokens" not in s_off  # spec-off stats carry no spec keys
+
+
 def test_spec_quantized_kv_matches_quantized_baseline():
     cfg, params = _make("olmo-1b")
     base, _ = _run_engine(cfg, params, PROMPTS[:2], quantize_kv=True)
