@@ -37,7 +37,10 @@ harness serves a reduced model through the continuous-batching engine:
 
 Results are also written to ``benchmarks/results/llm_inference.json`` (the
 CI smoke step asserts the shared-prefix scenario parses and reports a
-nonzero hit rate).  The full-size mistral-nemo-12b decode-step roofline
+nonzero hit rate, and that the dense/paged rows carry TTFT/TPOT p50/p99
+sourced from the engine's metrics registry).  ``--trace-out PATH``
+additionally dumps the paged run's request-lifecycle Chrome trace (CI
+validates its event schema; see docs/observability.md).  The full-size mistral-nemo-12b decode-step roofline
 (HBM-bound KV reads) is derived from the dry-run artifacts when present.
 """
 
@@ -83,6 +86,11 @@ def _drive(eng, prompts=None, *, max_new=MAX_NEW) -> dict:
     s = eng.stats()
     s["wall_s"] = dt
     s["tok_per_s"] = s["tokens_out"] / dt
+    # latency percentiles come from the engine's histogram layer, not ad-hoc
+    # means over request timestamps
+    for key, metric in (("ttft", "engine_ttft_seconds"), ("tpot", "engine_tpot_seconds")):
+        p = eng.metrics.percentiles(metric, pcts=(50, 99))
+        s[f"{key}_p50_s"], s[f"{key}_p99_s"] = p[50], p[99]
     return s
 
 
@@ -91,7 +99,7 @@ def _shared_prefix_prompts() -> list[list[int]]:
     return [system + [200 + i * UNIQUE_TAIL + t for t in range(UNIQUE_TAIL)] for i in range(N_REQUESTS)]
 
 
-def run() -> list[dict]:
+def run(trace_out: str | None = None) -> list[dict]:
     cfg = reduce_for_smoke(get_config("mistral-nemo-12b"))
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
 
@@ -111,8 +119,12 @@ def run() -> list[dict]:
         cache_kind="paged",
         block_size=BLOCK_SIZE,
         num_blocks=num_blocks,
+        trace_capacity=65536,
     )
     ps = _drive(paged)
+    if trace_out:
+        Path(trace_out).parent.mkdir(parents=True, exist_ok=True)
+        paged.tracer.write(trace_out)
 
     # shared-system-prompt A/B: same paged engine shape, prefix cache on/off.
     # max_batch < N so later requests admit after the prefix is indexed —
@@ -148,10 +160,12 @@ def run() -> list[dict]:
         )
         spec[label] = _drive(eng, spec_prompts, max_new=SPEC_MAX_NEW)
 
+    pct_fields = ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s")
     rows = [
         {
             "name": "llm_inference_dense_cpu",
             "us_per_call": ds["wall_s"] / max(ds["decode_steps"], 1) * 1e6,
+            **{k: ds[k] for k in pct_fields},
             "derived": (
                 f"tok/s={ds['tok_per_s']:.1f} peak_concurrent={ds['peak_active']} "
                 f"cache_bytes={ds['cache_bytes']}"
@@ -160,10 +174,13 @@ def run() -> list[dict]:
         {
             "name": "llm_inference_paged_cpu",
             "us_per_call": ps["wall_s"] / max(ps["decode_steps"], 1) * 1e6,
+            **{k: ps[k] for k in pct_fields},
             "derived": (
                 f"tok/s={ps['tok_per_s']:.1f} peak_concurrent={ps['peak_active']} "
                 f"cache_bytes={ps['cache_bytes']} peak_blocks={ps['alloc_peak_in_use']}"
-                f"/{ps['alloc_capacity']}"
+                f"/{ps['alloc_capacity']} "
+                f"ttft_p50_ms={ps['ttft_p50_s'] * 1e3:.1f} "
+                f"ttft_p99_ms={ps['ttft_p99_s'] * 1e3:.1f}"
             ),
         },
     ]
@@ -176,6 +193,8 @@ def run() -> list[dict]:
             "prefix_hit_tokens": s.get("prefix_hit_tokens", 0),
             "prefix_hit_rate": s.get("prefix_hit_rate", 0.0),
             "mean_ttft_s": s["mean_ttft_s"],
+            "ttft_p50_s": s["ttft_p50_s"],
+            "ttft_p99_s": s["ttft_p99_s"],
             "derived": (
                 f"mean_ttft_ms={(s['mean_ttft_s'] or 0.0) * 1e3:.1f} "
                 f"prefill_tokens={s['prefill_tokens']} "
@@ -299,8 +318,13 @@ def main() -> None:
         help="run the tensor-parallel token-equivalence A/B at this degree "
         "instead of the single-device scenarios",
     )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write the paged-engine run's request-lifecycle trace as "
+        "Chrome-trace JSON (single-device scenarios only)",
+    )
     args = ap.parse_args()
-    rows = run_tp(args.tp) if args.tp > 1 else run()
+    rows = run_tp(args.tp) if args.tp > 1 else run(trace_out=args.trace_out)
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
 

@@ -48,7 +48,32 @@ def main() -> None:
         ttft = f"{r.ttft*1e3:7.1f}ms" if r.ttft is not None else "  never admitted"
         print(f"req {r.req_id:2d} [{kind}] ttft={ttft}  tokens={r.generated[:8]}...")
     stats = eng.stats()
-    print("engine stats:", stats)
+
+    # end-of-run summary from the metrics registry: latency percentiles per
+    # phase plus the DCIM-style energy attribution (docs/observability.md)
+    print()
+    print(f"{'latency':<24} {'p50':>10} {'p90':>10} {'p99':>10}")
+    for label, name in (
+        ("queue wait", "engine_queue_wait_seconds"),
+        ("ttft", "engine_ttft_seconds"),
+        ("tpot", "engine_tpot_seconds"),
+        ("engine step", "engine_step_seconds"),
+        ("prefill chunk", "engine_prefill_chunk_seconds"),
+    ):
+        p = eng.metrics.percentiles(name)
+        cells = "".join(
+            f" {v*1e3:9.2f}ms" if v is not None else f" {'-':>11}" for v in p.values()
+        )
+        print(f"{label:<24}{cells}")
+    print(
+        f"{'throughput':<24} {stats['tokens_out']} tokens, "
+        f"{stats['decode_steps']} decode steps"
+    )
+    if "joules_per_token" in stats:
+        print(
+            f"{'energy':<24} {stats['energy_joules']:.1f} J IT-side, "
+            f"{stats['joules_per_token']:.2f} J/token"
+        )
     assert all(len(r.generated) > 0 for r in reqs), "a request produced no tokens"
     if args.spec_decode != "off":
         print(

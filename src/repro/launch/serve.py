@@ -22,7 +22,10 @@ ngram|draft`` turns on speculative decoding with ``--spec-k`` drafted tokens
 per verify pass; ``--tp N`` shards params and the paged K/V pools over a
 ``(data=1, model=N)`` mesh — the paper's 4-way Grace-Hopper node is
 ``--tp 4`` (see docs/serving.md for the tuning guide and the
-sharded-vs-replicated state matrix).
+sharded-vs-replicated state matrix).  ``--metrics-json`` / ``--trace-out``
+dump the observability layer's registry snapshot and Chrome trace after the
+drain, and ``--profile`` turns on per-phase dispatch timing (see
+docs/observability.md).
 """
 
 from __future__ import annotations
@@ -84,6 +87,21 @@ def main() -> None:
         "(data=1, model=tp) mesh (CPU: set "
         "XLA_FLAGS=--xla_force_host_platform_device_count=N first)",
     )
+    ap.add_argument(
+        "--metrics-json", default=None, metavar="PATH",
+        help="write the metrics registry snapshot (counters/gauges/histogram "
+        "percentiles) as JSON after the drain",
+    )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="write the request-lifecycle trace as Chrome-trace JSON "
+        "(open in chrome://tracing or ui.perfetto.dev)",
+    )
+    ap.add_argument(
+        "--profile", action="store_true",
+        help="bracket each jitted dispatch with block_until_ready so step "
+        "latency decomposes by phase (adds host syncs; off by default)",
+    )
     args = ap.parse_args()
 
     cfg = reduce_for_smoke(get_config(args.arch))
@@ -113,6 +131,8 @@ def main() -> None:
         prefill_budget=args.prefill_budget,
         spec_decode=args.spec_decode,
         spec_k=args.spec_k,
+        profile=args.profile,
+        trace_capacity=65536 if args.trace_out else 4096,
     )
 
     rng = random.Random(args.seed)
@@ -136,6 +156,20 @@ def main() -> None:
         hit = f" prefix_hit={r.prefix_hit_tokens:3d}" if r.prefix_hit_tokens else ""
         print(f"req {r.req_id:3d} [{kind}] ttft={ttft} len={len(r.generated)}{hit} head={r.generated[:6]}")
     print("[serve] stats:", eng.stats())
+    for name in ("engine_ttft_seconds", "engine_tpot_seconds", "engine_step_seconds"):
+        p = eng.metrics.percentiles(name)
+        if p[50] is not None:
+            pretty = "  ".join(f"p{int(k)}={v*1e3:.2f}ms" for k, v in p.items())
+            print(f"[serve] {name}: {pretty}")
+    if args.metrics_json:
+        eng.metrics.write_json(args.metrics_json)
+        print(f"[serve] metrics snapshot -> {args.metrics_json}")
+    if args.trace_out:
+        eng.tracer.write(args.trace_out)
+        print(
+            f"[serve] chrome trace -> {args.trace_out} "
+            f"({len(eng.tracer.events)} events, {eng.tracer.dropped} dropped)"
+        )
 
 
 if __name__ == "__main__":

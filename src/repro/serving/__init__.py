@@ -1,4 +1,14 @@
 from repro.serving.engine import InferenceEngine, Request, RequestState, binary_chunks
+from repro.serving.metrics import (
+    Counter,
+    EnergyBridge,
+    Gauge,
+    Histogram,
+    ManualClock,
+    MetricsRegistry,
+    exponential_buckets,
+)
+from repro.serving.trace import SCHEDULER_TRACK, TraceEvent, Tracer, slot_track
 from repro.serving.kvcache import (
     clear_block_row,
     clear_slot,
@@ -42,4 +52,15 @@ __all__ = [
     "write_request_into_slot",
     "sample_token",
     "sample_tokens",
+    "Counter",
+    "EnergyBridge",
+    "Gauge",
+    "Histogram",
+    "ManualClock",
+    "MetricsRegistry",
+    "exponential_buckets",
+    "SCHEDULER_TRACK",
+    "TraceEvent",
+    "Tracer",
+    "slot_track",
 ]

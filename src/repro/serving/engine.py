@@ -79,6 +79,18 @@ head counts that don't divide the mesh fall back to the XLA reference
 path), and the sampler/spec-accept dispatches consume the vocab-sharded
 logits directly.  TP=n greedy decode is token-identical to TP=1 (asserted
 in ``tests/test_sharded_serving.py``).
+
+**Observability** (``serving.metrics`` + ``serving.trace``, see
+docs/observability.md): every timestamp routes through one injectable
+``clock``; latencies (queue wait, TTFT, TPOT, step, prefill chunk) land in
+fixed-bucket histograms and throughputs in counters on ``self.metrics``;
+request-lifecycle events (submit/admit/chunk/first-token/spec/finish/evict)
+record into ``self.tracer``'s bounded ring buffer, exportable as
+Chrome-trace JSON with one track per slot plus a scheduler track.
+``profile=True`` opts into ``block_until_ready``-bracketed per-phase
+dispatch timing (off by default: the hot path takes no extra host syncs),
+and an ``EnergyBridge`` charges each step's chip-seconds into the seed
+``core.telemetry.EnergyLedger``, attributed per request as joules/token.
 """
 
 from __future__ import annotations
@@ -115,10 +127,17 @@ from repro.serving.kvcache import (
     truncate_block_rows,
     write_request_into_slot,
 )
+from repro.serving.metrics import EnergyBridge, MetricsRegistry
 from repro.serving.paged import BlockAllocator, blocks_needed, truncate_blocks
 from repro.serving.prefix import PrefixIndex
 from repro.serving.sampler import sample_token, sample_tokens, spec_accept
 from repro.serving.spec_decode import DraftModel, make_draft_config, ngram_draft
+from repro.serving.trace import SCHEDULER_TRACK, Tracer, slot_track
+
+# patchable seam for the opt-in profiler: tests monkeypatch this to assert
+# the default path never introduces a host sync (profile=False must not
+# call it at all)
+_block_until_ready = jax.block_until_ready
 
 # families whose prefill is exact under right-padding (causal attention:
 # pad positions can never influence earlier K/V or the last-real-token
@@ -167,13 +186,34 @@ class Request:
     prefix_hit_tokens: int = 0  # prompt tokens served from the prefix cache
     reg_block: int = 0  # prefix registration resume point (block index, ...
     reg_parent: int = 0  # ... chain hash) — registration is incremental
-    submit_t: float = field(default_factory=time.monotonic)
+    # timestamps come from the engine's injectable clock (metrics.ManualClock
+    # in tests), not time.monotonic directly — latencies are assertable
+    submit_t: float = 0.0
+    admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
+    energy_j: float = 0.0  # IT-side joules attributed to this request
+    step_work: int = 0  # tokens computed this step (energy attribution; reset per step)
 
     @property
     def ttft(self) -> Optional[float]:
         return None if self.first_token_t is None else self.first_token_t - self.submit_t
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        return None if self.admit_t is None else self.admit_t - self.submit_t
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean inter-token time after the first token (finished requests
+        with >= 2 generated tokens)."""
+        if self.done_t is None or self.first_token_t is None or len(self.generated) < 2:
+            return None
+        return (self.done_t - self.first_token_t) / (len(self.generated) - 1)
+
+    @property
+    def joules_per_token(self) -> Optional[float]:
+        return self.energy_j / len(self.generated) if self.generated else None
 
 
 class InferenceEngine:
@@ -201,6 +241,12 @@ class InferenceEngine:
         draft_params=None,
         mesh=None,
         parallel=None,
+        clock=None,
+        metrics: Optional[MetricsRegistry] = None,
+        tracer: Optional[Tracer] = None,
+        trace_capacity: int = 4096,
+        profile: bool = False,
+        energy: Optional[EnergyBridge] = None,
     ):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only; no decode serving")
@@ -233,6 +279,37 @@ class InferenceEngine:
                 stacklevel=2,
             )
         self.attn_impl = attn_impl
+
+        # ---- observability: one injectable clock feeds every timestamp
+        # (request lifecycle, tracer, profiler), one registry collects every
+        # counter/gauge/histogram, one bounded ring buffer records the
+        # request-lifecycle events.  All host-side scalar work — the default
+        # path adds no device syncs (profile=True opts into
+        # block_until_ready-bracketed per-phase timing).
+        self._clock = clock if clock is not None else time.monotonic
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(self._clock, trace_capacity)
+        self._profile = profile
+        self._phase_acc: dict[str, float] = {}
+        M = self.metrics
+        self._c_submitted = M.counter("engine_requests_submitted_total", "requests accepted by submit()")
+        self._c_admitted = M.counter("engine_requests_admitted_total", "requests admitted into a batch slot")
+        self._c_finished = M.counter("engine_requests_finished_total", "requests finished (EOS or max_new_tokens)")
+        self._c_tokens = M.counter("engine_tokens_out_total", "generated tokens emitted")
+        self._c_prefill_tokens = M.counter("engine_prefill_tokens_total", "prompt tokens computed (prefix hits excluded)")
+        self._c_prefix_hit = M.counter("engine_prefix_hit_tokens_total", "prompt tokens served from the prefix cache")
+        self._c_drafted = M.counter("engine_spec_drafted_total", "speculative candidate tokens proposed")
+        self._c_accepted = M.counter("engine_spec_accepted_total", "speculative candidate tokens committed")
+        self._c_energy = M.counter("engine_energy_joules_total", "IT-side joules charged to serving steps")
+        self._h_queue_wait = M.histogram("engine_queue_wait_seconds", "submit to admission")
+        self._h_ttft = M.histogram("engine_ttft_seconds", "submit to first generated token")
+        self._h_admit_first = M.histogram("engine_admit_to_first_token_seconds", "admission to first generated token")
+        self._h_tpot = M.histogram("engine_tpot_seconds", "mean inter-token time per finished request")
+        self._h_step = M.histogram("engine_step_seconds", "wall time of one engine step()")
+        self._h_prefill_chunk = M.histogram("engine_prefill_chunk_seconds", "one chunked-prefill dispatch")
+        self._g_queue = M.gauge("engine_queue_depth", "requests waiting for admission")
+        self._g_active = M.gauge("engine_active_slots", "slots decoding")
+        self._g_prefilling = M.gauge("engine_prefilling_slots", "slots mid chunked prefill")
 
         # ---- tensor parallelism: shard params over the mesh's model axis;
         # cache shardings are attached after the cache is built below.  The
@@ -273,6 +350,13 @@ class InferenceEngine:
                     RuntimeWarning,
                     stacklevel=2,
                 )
+
+        # DCIM bridge (paper §IV.A): each step charges chip-seconds at an
+        # occupancy-derived utilization into the seed EnergyLedger; the
+        # engine then attributes the joules to the requests that did work
+        self.energy = (
+            energy if energy is not None else EnergyBridge(chips=mesh.size if mesh is not None else 1)
+        )
 
         # chunked prefill (and with it prefix caching) needs a paged cache
         # and a family whose chunk state is fully captured by written K/V
@@ -329,7 +413,12 @@ class InferenceEngine:
             if draft_params is None:
                 draft_params = init_params(dcfg, jax.random.PRNGKey(seed + 1), jnp.float32)
             self._draft = DraftModel(
-                dcfg, draft_params, max_batch=max_batch, max_seq=max_seq, seed=seed
+                dcfg,
+                draft_params,
+                max_batch=max_batch,
+                max_seq=max_seq,
+                seed=seed,
+                metrics=self.metrics,
             )
 
         if cache_kind == "paged":
@@ -345,6 +434,22 @@ class InferenceEngine:
                 if (self._chunked if prefix_cache is None else prefix_cache and self._chunked)
                 else None
             )
+            # allocator publishes pool occupancy into the shared registry;
+            # the engine wraps the eviction callback (the prefix index set
+            # its unmap hook in __post_init__) so LRU reclaims surface as
+            # trace events too
+            self.allocator.attach_metrics(self.metrics)
+            if self.prefix is not None:
+                self.prefix.attach_metrics(self.metrics)
+            self._g_frag = self.metrics.gauge(
+                "pool_fragmentation", "allocator free-list fragmentation"
+            )
+            inner_evict = self.allocator.on_evict
+            def _evict_hook(block, _inner=inner_evict):
+                if _inner is not None:
+                    _inner(block)
+                self.tracer.instant("evict", track=SCHEDULER_TRACK, block=block)
+            self.allocator.on_evict = _evict_hook
             self.tbl = np.zeros((max_batch, self.max_blocks_per_seq), np.int32)
             self._tbl_dirty = True
             self.cache = init_paged_cache(
@@ -483,6 +588,7 @@ class InferenceEngine:
             online=online,
             temperature=temperature,
             top_k=top_k,
+            submit_t=self._clock(),
         )
         # priority-aware insert keeps the queue in admission order (online
         # first, FCFS within each class) — no per-admission re-sort
@@ -491,6 +597,15 @@ class InferenceEngine:
             self.queue.insert(idx, req)
         else:
             self.queue.append(req)
+        self._c_submitted.inc()
+        self._g_queue.set(len(self.queue))
+        self.tracer.instant(
+            "submit",
+            track=SCHEDULER_TRACK,
+            req_id=req.req_id,
+            prompt_len=len(req.prompt),
+            online=online,
+        )
         return req
 
     def _free_slots(self) -> list[int]:
@@ -521,6 +636,40 @@ class InferenceEngine:
         return self._prefill(self.params, batch)
 
     # ------------------------------------------------------------------
+    def _dispatch(self, phase: str, fn, *args):
+        """Run one jitted dispatch, optionally profiled.
+
+        ``profile=False`` (default) is a plain call — no timing, no
+        ``block_until_ready``, zero extra host syncs on the hot path.
+        ``profile=True`` brackets the dispatch with the injectable clock and
+        a device sync so step latency decomposes by phase
+        (``engine_profile_<phase>_seconds`` histograms, and a per-step
+        breakdown in the tracer's ``step`` span args)."""
+        if not self._profile:
+            return fn(*args)
+        t0 = self._clock()
+        out = fn(*args)
+        _block_until_ready(out)
+        dt = self._clock() - t0
+        self.metrics.histogram(
+            f"engine_profile_{phase}_seconds", f"synced {phase} dispatch time"
+        ).observe(dt)
+        self._phase_acc[phase] = self._phase_acc.get(phase, 0.0) + dt
+        return out
+
+    def _note_admit(self, req: Request, slot: int) -> None:
+        req.admit_t = self._clock()
+        self._c_admitted.inc()
+        self._h_queue_wait.observe(req.admit_t - req.submit_t)
+        self.tracer.instant(
+            "admit",
+            track=slot_track(slot),
+            req_id=req.req_id,
+            prompt_len=len(req.prompt),
+            prefix_hit_tokens=req.prefix_hit_tokens,
+            blocks=len(req.blocks),
+        )
+
     def _release_blocks(self, blocks: list[int]) -> None:
         """Drop this request's references; the prefix index parks indexed
         blocks in the LRU cached pool, everything else frees eagerly."""
@@ -571,6 +720,7 @@ class InferenceEngine:
             self.prefix_hits += 1
             self.prefix_hit_tokens += matched
             req.prefix_hit_tokens = matched
+            self._c_prefix_hit.inc(matched)
         if self.prefix is not None:
             # registration resumes after the matched (already indexed) blocks
             req.reg_block = len(full)
@@ -583,6 +733,7 @@ class InferenceEngine:
         self.pos[slot] = matched
         if self._draft is not None:
             self._draft.reset(slot)
+        self._note_admit(req, slot)
         # the engine table row stays null until the prompt completes, so
         # interleaved decode steps write into the scratch null block, never
         # into a half-prefilled request's memory
@@ -596,14 +747,22 @@ class InferenceEngine:
             needed = blocks_needed(len(req.prompt) + req.max_new_tokens, self.block_size)
             if needed > self.allocator.num_free:
                 return False  # out of blocks: backpressure until frees
-        logits, raw = self._run_prefill(req)
+        self._note_admit(req, slot)
+        t0 = self._clock()
+        logits, raw = self._dispatch("prefill", self._run_prefill, req)
         n = len(req.prompt)
         self.prefill_chunks += 1
         self.prefill_tokens += n
+        self._c_prefill_tokens.inc(n)
+        req.step_work += n
+        self._h_prefill_chunk.observe(self._clock() - t0)
+        self.tracer.span(
+            "prefill", t0, track=slot_track(slot), req_id=req.req_id, tokens=n
+        )
         if self.cache_kind == "paged":
             req.blocks = self.allocator.alloc(needed)
-            self.cache = self._graft(
-                self.cache, raw, jnp.asarray(req.blocks, jnp.int32), n, slot
+            self.cache = self._dispatch(
+                "graft", self._graft, self.cache, raw, jnp.asarray(req.blocks, jnp.int32), n, slot
             )
             self.tbl[slot] = make_table_row(req.blocks, self.max_blocks_per_seq)
             self._tbl_dirty = True
@@ -645,8 +804,13 @@ class InferenceEngine:
         self._key, sub = jax.random.split(self._key)
         tok = int(sample_token(logits, req.temperature, sub, top_k=req.top_k))
         req.generated.append(tok)
-        req.first_token_t = time.monotonic()
+        req.first_token_t = self._clock()
         self.tokens_out += 1
+        self._c_tokens.inc()
+        self._h_ttft.observe(req.first_token_t - req.submit_t)
+        if req.admit_t is not None:
+            self._h_admit_first.observe(req.first_token_t - req.admit_t)
+        self.tracer.instant("first_token", track=slot_track(req.slot), req_id=req.req_id)
         self._finish_if_done(req)
 
     # ------------------------------------------------------------------
@@ -657,13 +821,27 @@ class InferenceEngine:
         row = jnp.asarray(
             make_table_row(req.blocks, self.max_blocks_per_seq), jnp.int32
         )[None]
-        logits, self.cache = self._chunk_step(
-            self.params, self.cache, toks, jnp.asarray([start], jnp.int32), row
+        t0 = self._clock()
+        logits, self.cache = self._dispatch(
+            "prefill_chunk",
+            self._chunk_step,
+            self.params,
+            self.cache,
+            toks,
+            jnp.asarray([start], jnp.int32),
+            row,
+        )
+        self._h_prefill_chunk.observe(self._clock() - t0)
+        self.tracer.span(
+            "prefill_chunk", t0, track=slot_track(req.slot), req_id=req.req_id,
+            pos=start, tokens=c,
         )
         req.prefill_pos += c
+        req.step_work += c
         self.pos[req.slot] = req.prefill_pos
         self.prefill_chunks += 1
         self.prefill_tokens += c
+        self._c_prefill_tokens.inc(c)
         if self.prefix is not None:
             # index the newly-completed full prompt blocks (written above)
             req.reg_block, req.reg_parent = self.prefix.register(
@@ -750,8 +928,12 @@ class InferenceEngine:
             top_ks[s] = r.top_k
             self.spec_slot_steps += 1
             self.spec_drafted += len(d)
+            self._c_drafted.inc(len(d))
+            r.step_work += K + 1  # verify feeds the whole window per slot
             self.verify_tokens += K + 1  # fed window: last committed + K lanes
-        logits, self.cache = self._verify(
+        logits, self.cache = self._dispatch(
+            "verify",
+            self._verify,
             self.params,
             self.cache,
             jnp.asarray(tokens),
@@ -761,6 +943,7 @@ class InferenceEngine:
         self.steps += 1
         self.spec_steps += 1
         self._key, sub = jax.random.split(self._key)
+        t_sample = self._clock() if self._profile else 0.0
         drafts_j = jnp.asarray(drafts)
         q_j = (
             jnp.asarray(qprobs)
@@ -776,7 +959,15 @@ class InferenceEngine:
             jnp.asarray(top_ks),
             sub,
         )
+        # np.asarray forces the host sync, so the sample phase needs no
+        # extra block_until_ready
         n_acc, final = np.asarray(n_acc), np.asarray(final)
+        if self._profile:
+            dt = self._clock() - t_sample
+            self.metrics.histogram(
+                "engine_profile_sample_seconds", "synced sample dispatch time"
+            ).observe(dt)
+            self._phase_acc["sample"] = self._phase_acc.get("sample", 0.0) + dt
         produced = 0
         t_start = np.zeros((self.max_batch,), np.int32)
         t_end = np.zeros((self.max_batch,), np.int32)  # end <= start: no-op slot
@@ -794,8 +985,18 @@ class InferenceEngine:
             self.pos[s] = base + cut
             produced += cut
             self.tokens_out += cut
+            self._c_tokens.inc(cut)
             self.spec_accepted += min(na, cut)
+            self._c_accepted.inc(min(na, cut))
             self.spec_emitted += cut
+            self.tracer.instant(
+                "spec_accept",
+                track=slot_track(s),
+                req_id=r.req_id,
+                drafted=int(valid[s].sum()),
+                accepted=na,
+                emitted=cut,
+            )
             if self._draft is not None:
                 # the drafter absorbed its own provisional tokens; truncate
                 # its view to the committed prefix (divergent feeds are
@@ -809,11 +1010,20 @@ class InferenceEngine:
                 # zeroed so the pool never carries live-looking rows past
                 # the committed length
                 t_start[s], t_end[s] = base + cut, base + K + 1
+                self.tracer.instant(
+                    "rollback", track=slot_track(s), req_id=r.req_id,
+                    tokens=int(K + 1 - cut),
+                )
             self._reclaim_window_blocks(r)
         if np.any(t_end > t_start):
             # one whole-batch dispatch rolls back every slot's tail
-            self.cache = self._trunc_rows(
-                self.cache, jnp.asarray(self.tbl), jnp.asarray(t_start), jnp.asarray(t_end)
+            self.cache = self._dispatch(
+                "rollback",
+                self._trunc_rows,
+                self.cache,
+                jnp.asarray(self.tbl),
+                jnp.asarray(t_start),
+                jnp.asarray(t_end),
             )
         return produced
 
@@ -823,8 +1033,30 @@ class InferenceEngine:
             return
         if len(req.generated) >= req.max_new_tokens or (req.generated and req.generated[-1] == self.eos):
             req.state = RequestState.DONE
-            req.done_t = time.monotonic()
+            req.done_t = self._clock()
             slot = req.slot
+            self._c_finished.inc()
+            if req.tpot is not None:
+                self._h_tpot.observe(req.tpot)
+            self.tracer.instant(
+                "finish",
+                track=slot_track(slot),
+                req_id=req.req_id,
+                reason="eos" if req.generated and req.generated[-1] == self.eos else "length",
+                tokens=len(req.generated),
+            )
+            if req.admit_t is not None:
+                # one span covering the request's whole residency in its
+                # slot — the per-request lane in chrome://tracing
+                self.tracer.span(
+                    f"req {req.req_id}",
+                    req.admit_t,
+                    end=req.done_t,
+                    track=slot_track(slot),
+                    req_id=req.req_id,
+                    tokens=len(req.generated),
+                    prefix_hit_tokens=req.prefix_hit_tokens,
+                )
             self.slots[slot] = None
             if self.cache_kind == "paged":
                 # token-level truncate at the final committed length: tail
@@ -900,6 +1132,10 @@ class InferenceEngine:
     def step(self) -> int:
         """One engine iteration: admit, spend the prefill budget, then
         advance all decoding slots one token."""
+        t0 = self._clock()
+        done0 = len(self.done)
+        if self._profile:
+            self._phase_acc = {}
         self._admit()
         if self._chunked:
             self._prefill_step()
@@ -918,10 +1154,14 @@ class InferenceEngine:
                 temps[r.slot] = r.temperature
                 top_ks[r.slot] = r.top_k
             pos = jnp.asarray(self.pos, jnp.int32)
-            logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tokens), pos)
+            logits, self.cache = self._dispatch(
+                "decode", self._decode, self.params, self.cache, jnp.asarray(tokens), pos
+            )
             self.steps += 1
             # one whole-batch sampling dispatch; the all-greedy batch (the
-            # common serving default) skips the sort/categorical work
+            # common serving default) skips the sort/categorical work.
+            # np.asarray is the host sync, so profiling adds no extra one
+            t_sample = self._clock() if self._profile else 0.0
             if all(r.temperature <= 0.0 for r in active):
                 sampled = np.asarray(jnp.argmax(logits, axis=-1))
             else:
@@ -929,16 +1169,55 @@ class InferenceEngine:
                 sampled = np.asarray(
                     sample_tokens(logits, jnp.asarray(temps), jnp.asarray(top_ks), sub)
                 )
+            if self._profile:
+                dt = self._clock() - t_sample
+                self.metrics.histogram(
+                    "engine_profile_sample_seconds", "synced sample dispatch time"
+                ).observe(dt)
+                self._phase_acc["sample"] = self._phase_acc.get("sample", 0.0) + dt
             for r in active:
                 r.generated.append(int(sampled[r.slot]))
                 self.pos[r.slot] += 1
                 produced += 1
                 self.tokens_out += 1
+                self._c_tokens.inc()
+                r.step_work += 1
                 if self.cache_kind == "paged":
                     self._reclaim_window_blocks(r)
                 self._finish_if_done(r)
         self._maybe_defrag()
+        self._note_step(t0, done0, produced)
         return produced
+
+    def _note_step(self, t0: float, done0: int, produced: int) -> None:
+        """Per-step observability tail: step latency + span, gauges, and
+        energy attribution to the requests that did work this step."""
+        dt = max(self._clock() - t0, 0.0)
+        self._h_step.observe(dt)
+        span_args = {"produced": produced}
+        if self._profile and self._phase_acc:
+            span_args["phases"] = {k: round(v, 6) for k, v in self._phase_acc.items()}
+        self.tracer.span("step", t0, end=t0 + dt, track=SCHEDULER_TRACK, **span_args)
+        self._g_queue.set(len(self.queue))
+        self._g_active.set(sum(r is not None and not r.prefilling for r in self.slots))
+        self._g_prefilling.set(len(self._prefilling))
+        if self.allocator is not None:
+            self._g_frag.set(self.allocator.fragmentation())
+        if self.energy is None:
+            return
+        # requests that computed tokens this step: still in a slot, or
+        # finished during the step.  The step's IT-side joules split
+        # proportional to tokens computed (prefill chunks, decode tokens,
+        # verify windows)
+        workers = [r for r in self.slots if r is not None and r.step_work > 0]
+        workers += [r for r in self.done[done0:] if r.step_work > 0]
+        occupancy = min(len(workers) / self.max_batch, 1.0)
+        joules = self.energy.record_step(dt, occupancy=occupancy)
+        self._c_energy.inc(joules)
+        total_work = sum(r.step_work for r in workers)
+        for r in workers:
+            r.energy_j += joules * r.step_work / total_work
+            r.step_work = 0
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         for _ in range(max_steps):
@@ -982,7 +1261,13 @@ class InferenceEngine:
         return total
 
     def stats(self) -> dict:
-        """Engine counters (see docs/serving.md for the glossary).
+        """Engine counters (see docs/serving.md for the glossary and
+        docs/observability.md for the histogram/trace layer).
+
+        Returns a **defensive snapshot**: every value is a scalar or a
+        freshly-built dict — mutating the result can never corrupt engine
+        state, and every derived rate is division-by-zero-guarded so an
+        empty or truncated drain still snapshots cleanly.
 
         ``mean_ttft_s`` is computed over FINISHED requests only and
         ``requests_queued`` / ``requests_active`` / ``requests_prefilling``
@@ -1004,12 +1289,23 @@ class InferenceEngine:
             "decode_steps": self.steps,
             "tokens_out": self.tokens_out,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else None,
-            "slot_utilization": 1.0 - len(self._free_slots()) / self.max_batch,
+            "ttft_p50_s": self._h_ttft.percentile(50),
+            "ttft_p99_s": self._h_ttft.percentile(99),
+            "tpot_p50_s": self._h_tpot.percentile(50),
+            "tpot_p99_s": self._h_tpot.percentile(99),
+            "slot_utilization": (
+                1.0 - len(self._free_slots()) / self.max_batch if self.max_batch else 0.0
+            ),
             "peak_active": self.peak_active,
             "cache_bytes": self.cache_bytes(),
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
         }
+        if self.energy is not None:
+            s["energy_joules"] = self.energy.joules
+            s["joules_per_token"] = (
+                self.energy.joules / self.tokens_out if self.tokens_out else 0.0
+            )
         if self.mesh is not None:
             s["tp"] = int(self.mesh.shape.get("model", 1))
             s["cache_bytes_per_device"] = self.cache_bytes(per_device=True)

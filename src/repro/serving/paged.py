@@ -86,6 +86,27 @@ class BlockAllocator:
         self.total_allocs = 0
         self.total_frees = 0
         self.evictions = 0
+        self._metrics = None  # attach_metrics publishes occupancy per mutation
+
+    def attach_metrics(self, registry) -> None:
+        """Publish allocator accounting into a ``serving.metrics``
+        registry: occupancy gauges refreshed on every alloc/free, eviction
+        and alloc/free counters.  Host-side scalar updates only."""
+        self._metrics = registry
+        self._m_in_use = registry.gauge("pool_blocks_in_use", "live (refcounted) blocks")
+        self._m_free = registry.gauge("pool_blocks_free", "allocatable blocks (free list + evictable cached)")
+        self._m_cached = registry.gauge("pool_blocks_cached", "refcount-0 blocks parked in the prefix LRU")
+        self._m_allocs = registry.counter("pool_allocs_total", "blocks allocated (cached revivals count)")
+        self._m_frees = registry.counter("pool_frees_total", "blocks freed or parked in the LRU")
+        self._m_evictions = registry.counter("pool_evictions_total", "LRU cached blocks reclaimed on demand")
+        self._publish()
+
+    def _publish(self) -> None:
+        if self._metrics is None:
+            return
+        self._m_in_use.set(len(self._ref))
+        self._m_free.set(self.num_free)
+        self._m_cached.set(len(self._cached))
 
     # -- accounting ----------------------------------------------------
     @property
@@ -137,6 +158,8 @@ class BlockAllocator:
         if self.on_evict is not None:
             self.on_evict(block)
         self.evictions += 1
+        if self._metrics is not None:
+            self._m_evictions.inc()
         return block
 
     def alloc(self, n: int) -> list[int]:
@@ -154,6 +177,9 @@ class BlockAllocator:
             self._ref[b] = 1
         self.total_allocs += n
         self.peak_in_use = max(self.peak_in_use, len(self._ref))
+        if self._metrics is not None:
+            self._m_allocs.inc(n)
+            self._publish()
         return blocks
 
     def incref(self, block: int) -> None:
@@ -173,6 +199,9 @@ class BlockAllocator:
         self._ref[block] = 1
         self.total_allocs += 1
         self.peak_in_use = max(self.peak_in_use, len(self._ref))
+        if self._metrics is not None:
+            self._m_allocs.inc()
+            self._publish()
 
     def _decref(self, block: int) -> bool:
         if block not in self._ref:
@@ -190,6 +219,9 @@ class BlockAllocator:
             if self._decref(b):
                 self._free.append(b)
                 self.total_frees += 1
+                if self._metrics is not None:
+                    self._m_frees.inc()
+        self._publish()
 
     def free_cached(self, blocks: list[int]) -> None:
         """Drop one reference per block; last reference parks the block in
@@ -198,6 +230,9 @@ class BlockAllocator:
             if self._decref(b):
                 self._cached[b] = None  # appended at the MRU end
                 self.total_frees += 1
+                if self._metrics is not None:
+                    self._m_frees.inc()
+        self._publish()
 
     def stats(self) -> dict:
         return {

@@ -69,9 +69,22 @@ class PrefixIndex:
     meta: dict[int, _Entry] = field(default_factory=dict)  # block -> entry
     children: dict[int, list[int]] = field(default_factory=dict)  # parent hash -> blocks
     registered: int = 0
+    _metrics: Optional[object] = field(default=None, repr=False)
 
     def __post_init__(self):
         self.allocator.on_evict = self._on_evict
+
+    def attach_metrics(self, registry) -> None:
+        """Publish index size and registration volume into a
+        ``serving.metrics`` registry."""
+        self._metrics = registry
+        self._m_entries = registry.gauge("prefix_entries", "indexed (matchable) prefix blocks")
+        self._m_registered = registry.counter("prefix_registrations_total", "blocks ever indexed")
+        self._m_entries.set(len(self.by_hash))
+
+    def _publish(self) -> None:
+        if self._metrics is not None:
+            self._m_entries.set(len(self.by_hash))
 
     def __len__(self) -> int:
         return len(self.by_hash)
@@ -173,8 +186,11 @@ class PrefixIndex:
                 self.meta[b] = _Entry(hash=h, parent=parent, tokens=toks)
                 self.children.setdefault(parent, []).append(b)
                 self.registered += 1
+                if self._metrics is not None:
+                    self._m_registered.inc()
             parent = h
             start_block = j + 1
+        self._publish()
         return start_block, parent
 
     def _on_evict(self, block: int) -> None:
@@ -188,6 +204,7 @@ class PrefixIndex:
             sibs.remove(block)
             if not sibs:
                 del self.children[ent.parent]
+        self._publish()
 
     def stats(self) -> dict:
         return {"entries": len(self.by_hash), "registered": self.registered}

@@ -117,7 +117,7 @@ class DraftModel:
     lengths to be equalised first, so it's left for a perf pass.
     """
 
-    def __init__(self, cfg, params, *, max_batch: int, max_seq: int, seed: int = 0):
+    def __init__(self, cfg, params, *, max_batch: int, max_seq: int, seed: int = 0, metrics=None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -125,6 +125,12 @@ class DraftModel:
         self.lens = np.zeros((max_batch,), np.int32)  # committed tokens absorbed
         self._decode = jax.jit(lambda p, c, t, q: decode_step(cfg, p, c, t, q))
         self._key = jax.random.PRNGKey(seed ^ 0x5BEC)
+        self._m_calls = self._m_feeds = None
+        if metrics is not None:
+            self._m_calls = metrics.counter("spec_draft_calls_total", "draft() invocations")
+            self._m_feeds = metrics.counter(
+                "spec_draft_feeds_total", "draft-model decode dispatches (catch-up + window)"
+            )
 
     def reset(self, slot: int) -> None:
         """New request in ``slot``: restart from position 0.  The stale cache
@@ -139,6 +145,8 @@ class DraftModel:
         self.lens[slot] = min(int(self.lens[slot]), committed)
 
     def _feed(self, slot: int, token: int, pos: int):
+        if self._m_feeds is not None:
+            self._m_feeds.inc()
         logits, self.caches[slot] = self._decode(
             self.params,
             self.caches[slot],
@@ -161,6 +169,8 @@ class DraftModel:
         distribution token ``i`` was drawn from (one-hot under greedy)."""
         if k <= 0:
             return [], np.zeros((0, 1), np.float32)
+        if self._m_calls is not None:
+            self._m_calls.inc()
         start = int(self.lens[slot])
         logits = None
         for i, t in enumerate(context[start:]):  # catch-up on committed tokens
