@@ -35,6 +35,20 @@ harness serves a reduced model through the continuous-batching engine:
   is not the win here — fewer decode steps means fewer full KV-cache
   sweeps, which is the HBM-bound cost that dominates on real hardware.
 
+* **open-loop SLO scheduling** (``--openloop``) — requests arrive on a
+  Poisson process at a fixed offered QPS instead of being pre-loaded
+  (closed-loop drains hide queueing delay entirely — the coordinated
+  omission trap).  The mix is 3:1 low-priority long completions vs
+  high-priority short interactive requests with a TTFT deadline, served
+  from a deliberately tight block pool.  The A/B runs the same arrival
+  trace under ``policy="slo"`` (priority/deadline ordering + preemption)
+  and ``policy="fcfs"``; time is virtual (``ManualClock`` advanced by a
+  per-step cost model), so TTFT/TPOT percentiles and preemption counts are
+  exact and machine-independent.  The SLO arm must beat FCFS on
+  high-priority p99 TTFT at equal offered load with >= 1 preemption
+  recorded (asserted here and by the CI ``async-serving`` job from
+  ``benchmarks/results/llm_inference_openloop.json``).
+
 Results are also written to ``benchmarks/results/llm_inference.json`` (the
 CI smoke step asserts the shared-prefix scenario parses and reports a
 nonzero hit rate, and that the dense/paged rows carry TTFT/TPOT p50/p99
@@ -47,16 +61,19 @@ validates its event schema; see docs/observability.md).  The full-size mistral-n
 from __future__ import annotations
 
 import json
+import random
 import time
+from collections import deque
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config.model import reduce_for_smoke
 from repro.configs import get_config
 from repro.models import init_params
-from repro.serving import InferenceEngine
+from repro.serving import InferenceEngine, ManualClock
 
 RESULTS_DIR = Path(__file__).resolve().parent / "results"
 RESULTS = RESULTS_DIR / "dryrun_single.json"
@@ -251,6 +268,139 @@ def run(trace_out: str | None = None) -> list[dict]:
     return rows
 
 
+# ---- open-loop SLO scheduling A/B -----------------------------------------
+OPENLOOP_QPS = 6.0
+OPENLOOP_REQUESTS = 24  # every 4th is high-priority interactive
+OPENLOOP_SEED = 7
+LOW_PROMPT, LOW_MAX_NEW = 24, 20  # 3 blocks of 16 at worst case
+HI_PROMPT, HI_MAX_NEW = 6, 6  # 1 block
+HI_DEADLINE_S = 0.25  # TTFT target for the interactive class
+# virtual per-step cost model: fixed dispatch overhead + per-token compute
+# (prefill chunk tokens, decode tokens and verify windows all count)
+STEP_OVERHEAD_S = 0.020
+TOKEN_COST_S = 0.001
+
+
+def _openloop_arrivals() -> list[tuple[float, bool]]:
+    """One Poisson arrival trace shared by both policy arms: (time, is_hi)."""
+    rng = random.Random(OPENLOOP_SEED)
+    t, out = 0.0, []
+    for i in range(OPENLOOP_REQUESTS):
+        t += rng.expovariate(OPENLOOP_QPS)
+        out.append((t, i % 4 == 3))
+    return out
+
+
+def _drive_openloop(eng, clock: ManualClock, arrivals) -> dict:
+    """Submit on the arrival trace and step on virtual time.
+
+    The clock advances by the step cost model after every ``step()`` and
+    jumps to the next arrival when the engine idles, so queueing delay —
+    the thing closed-loop drains cannot see — lands in every TTFT."""
+    pending = deque(arrivals)
+    rng = random.Random(OPENLOOP_SEED + 1)
+    reqs = []
+    while pending or eng.has_work:
+        while pending and pending[0][0] <= clock.now:
+            _, is_hi = pending.popleft()
+            n = HI_PROMPT if is_hi else LOW_PROMPT
+            prompt = [rng.randrange(2, 200) for _ in range(n)]
+            reqs.append(
+                eng.submit(
+                    prompt,
+                    max_new_tokens=HI_MAX_NEW if is_hi else LOW_MAX_NEW,
+                    priority=2 if is_hi else 0,
+                    deadline_s=HI_DEADLINE_S if is_hi else None,
+                )
+            )
+        if not eng.has_work:
+            clock.advance(max(pending[0][0] - clock.now, 0.0))
+            continue
+        # dispatch overhead lands before the step so a first token emitted
+        # inside it carries a non-zero TTFT; per-token compute lands after
+        clock.advance(STEP_OVERHEAD_S)
+        fed0 = eng.prefill_tokens + eng.verify_tokens
+        produced = eng.step()
+        fed = eng.prefill_tokens + eng.verify_tokens - fed0
+        clock.advance(TOKEN_COST_S * (produced + fed))
+    s = eng.stats()
+    s["makespan_s"] = clock.now
+    s["qps_sustained"] = len(reqs) / clock.now
+    for key, metric in (("ttft", "engine_ttft_seconds"), ("tpot", "engine_tpot_seconds")):
+        p = eng.metrics.percentiles(metric, pcts=(50, 99))
+        s[f"{key}_p50_s"], s[f"{key}_p99_s"] = p[50], p[99]
+    hi_ttfts = [r.ttft for r in reqs if r.priority > 0 and r.ttft is not None]
+    s["high_priority_ttft_p99_s"] = float(np.percentile(hi_ttfts, 99))
+    s["high_priority_ttft_p50_s"] = float(np.percentile(hi_ttfts, 50))
+    return s
+
+
+def run_openloop() -> list[dict]:
+    """SLO vs FCFS on one Poisson arrival trace at equal offered QPS."""
+    cfg = reduce_for_smoke(get_config("mistral-nemo-12b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    arrivals = _openloop_arrivals()
+    rows = []
+    by_policy = {}
+    for policy in ("slo", "fcfs"):
+        clock = ManualClock()
+        # pool sized so four low-priority completions exhaust it: the
+        # interactive class can only meet its deadline by preempting
+        eng = InferenceEngine(
+            cfg,
+            params,
+            max_batch=4,
+            max_seq=MAX_SEQ,
+            cache_kind="paged",
+            block_size=BLOCK_SIZE,
+            num_blocks=13,
+            prefix_cache=True,
+            prefill_budget=16,
+            policy=policy,
+            clock=clock,
+        )
+        s = _drive_openloop(eng, clock, arrivals)
+        by_policy[policy] = s
+        rows.append(
+            {
+                "name": f"llm_inference_openloop_{policy}_cpu",
+                "policy": policy,
+                "qps_offered": OPENLOOP_QPS,
+                "qps_sustained": s["qps_sustained"],
+                "us_per_call": s["high_priority_ttft_p99_s"] * 1e6,
+                "ttft_p50_s": s["ttft_p50_s"],
+                "ttft_p99_s": s["ttft_p99_s"],
+                "tpot_p50_s": s["tpot_p50_s"],
+                "tpot_p99_s": s["tpot_p99_s"],
+                "high_priority_ttft_p50_s": s["high_priority_ttft_p50_s"],
+                "high_priority_ttft_p99_s": s["high_priority_ttft_p99_s"],
+                "preemptions": s["preemptions"],
+                "requests_preempted": s["requests_preempted"],
+                "deadline_violations": s["deadline_violations"],
+                "requests_done": s["requests_done"],
+                "derived": (
+                    f"hi_p99_ttft_ms={s['high_priority_ttft_p99_s'] * 1e3:.1f} "
+                    f"preemptions={s['preemptions']} "
+                    f"deadline_miss={s['deadline_violations']} "
+                    f"qps={s['qps_sustained']:.2f}"
+                ),
+            }
+        )
+    slo, fcfs = by_policy["slo"], by_policy["fcfs"]
+    assert slo["requests_done"] == fcfs["requests_done"] == OPENLOOP_REQUESTS
+    assert slo["preemptions"] >= 1, "tight pool must force at least one preemption"
+    assert fcfs["preemptions"] == 0, "fcfs must never preempt"
+    assert slo["high_priority_ttft_p99_s"] < fcfs["high_priority_ttft_p99_s"], (
+        f"SLO scheduling must beat FCFS on high-priority p99 TTFT at equal "
+        f"offered QPS: {slo['high_priority_ttft_p99_s']:.3f}s vs "
+        f"{fcfs['high_priority_ttft_p99_s']:.3f}s"
+    )
+    assert slo["deadline_violations"] <= fcfs["deadline_violations"]
+    RESULTS_DIR.mkdir(exist_ok=True)
+    (RESULTS_DIR / "llm_inference_openloop.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
 def run_tp(tp: int) -> list[dict]:
     """TP=tp vs TP=1 A/B: token-identical greedy output, sharded cache bytes."""
     from repro.launch.mesh import make_serving_mesh
@@ -323,8 +473,16 @@ def main() -> None:
         help="write the paged-engine run's request-lifecycle trace as "
         "Chrome-trace JSON (single-device scenarios only)",
     )
+    ap.add_argument(
+        "--openloop", action="store_true",
+        help="run the open-loop Poisson-arrival SLO-vs-FCFS A/B on virtual "
+        "time instead of the closed-loop drain scenarios",
+    )
     args = ap.parse_args()
-    rows = run_tp(args.tp) if args.tp > 1 else run(trace_out=args.trace_out)
+    if args.openloop:
+        rows = run_openloop()
+    else:
+        rows = run_tp(args.tp) if args.tp > 1 else run(trace_out=args.trace_out)
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
 

@@ -1,0 +1,139 @@
+"""Stdlib SSE client smoke for the always-on HTTP front-end.
+
+CI starts ``launch/serve.py --http`` in the background, then runs this
+script against it.  It asserts the service contract end-to-end over a real
+socket, with no dependencies beyond the standard library:
+
+* ``GET /healthz`` answers (retried until the server finishes JAX init).
+* ``POST /v1/generate`` with ``stream: true`` yields Server-Sent Events —
+  at least two separate ``token`` frames (tokens must arrive
+  *incrementally*, not as one batch) followed by exactly one ``done``
+  frame whose summary is consistent with the streamed tokens.
+* A second, non-streaming request returns the same tokens as one JSON
+  object (same engine, greedy, so the completion is deterministic).
+* Invalid knobs (``max_new_tokens: -1``) get a 400, not a hang.
+* ``GET /metrics`` exposes the Prometheus registry with the request we
+  just ran accounted for.
+
+Exit code 0 on success; any assertion failure is fatal.
+
+    python scripts/sse_smoke.py --port 8731
+"""
+
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import sys
+import time
+
+PROMPT = [5, 9, 12, 7, 3]
+MAX_NEW = 8
+
+
+def wait_for_server(host: str, port: int, timeout_s: float) -> None:
+    deadline = time.monotonic() + timeout_s
+    last = None
+    while time.monotonic() < deadline:
+        try:
+            conn = http.client.HTTPConnection(host, port, timeout=5)
+            conn.request("GET", "/healthz")
+            resp = conn.getresponse()
+            body = resp.read()
+            conn.close()
+            assert resp.status == 200 and json.loads(body)["ok"], body
+            return
+        except (OSError, http.client.HTTPException) as e:
+            last = e
+            time.sleep(0.5)
+    sys.exit(f"server never came up on {host}:{port}: {last}")
+
+
+def sse_events(resp) -> list[tuple[str, dict]]:
+    """Parse an SSE body into (event, data) pairs as frames complete."""
+    events, event, data = [], None, []
+    for raw in resp:
+        line = raw.decode().rstrip("\n")
+        if line.startswith("event: "):
+            event = line[len("event: ") :]
+        elif line.startswith("data: "):
+            data.append(line[len("data: ") :])
+        elif not line and event is not None:
+            events.append((event, json.loads("".join(data))))
+            event, data = None, []
+    return events
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8731)
+    ap.add_argument("--startup-timeout", type=float, default=300.0)
+    args = ap.parse_args()
+
+    wait_for_server(args.host, args.port, args.startup_timeout)
+    print(f"[sse-smoke] /healthz ok on {args.host}:{args.port}")
+
+    # streaming generate: incremental token frames, then one done frame
+    conn = http.client.HTTPConnection(args.host, args.port, timeout=120)
+    conn.request(
+        "POST",
+        "/v1/generate",
+        body=json.dumps({"prompt": PROMPT, "max_new_tokens": MAX_NEW, "priority": 1}),
+    )
+    resp = conn.getresponse()
+    assert resp.status == 200, (resp.status, resp.read())
+    assert resp.getheader("Content-Type") == "text/event-stream"
+    events = sse_events(resp)
+    conn.close()
+    kinds = [k for k, _ in events]
+    assert kinds.count("done") == 1 and kinds[-1] == "done", kinds
+    token_frames = [d for k, d in events if k == "token"]
+    assert len(token_frames) >= 2, f"tokens arrived in {len(token_frames)} frame(s), want incremental"
+    streamed = [t for d in token_frames for t in d["tokens"]]
+    done = events[-1][1]
+    assert done["n_tokens"] == len(streamed) == MAX_NEW, (done, streamed)
+    assert done["reason"] in ("eos", "length") and done["ttft_s"] > 0, done
+    assert [d["index"] for d in token_frames] == sorted(d["index"] for d in token_frames)
+    print(f"[sse-smoke] streamed {len(streamed)} tokens over {len(token_frames)} frames")
+
+    # non-streaming arm must agree (greedy => deterministic completion)
+    conn = http.client.HTTPConnection(args.host, args.port, timeout=120)
+    conn.request(
+        "POST",
+        "/v1/generate",
+        body=json.dumps({"prompt": PROMPT, "max_new_tokens": MAX_NEW, "stream": False}),
+    )
+    resp = conn.getresponse()
+    body = json.loads(resp.read())
+    conn.close()
+    assert resp.status == 200 and body["tokens"] == streamed, (body, streamed)
+    print("[sse-smoke] non-streaming arm token-identical")
+
+    # validation surfaces as 400
+    conn = http.client.HTTPConnection(args.host, args.port, timeout=30)
+    conn.request("POST", "/v1/generate", body=json.dumps({"prompt": PROMPT, "max_new_tokens": -1}))
+    resp = conn.getresponse()
+    err = json.loads(resp.read())
+    conn.close()
+    assert resp.status == 400 and "max_new_tokens" in err["error"], (resp.status, err)
+
+    # the registry saw the traffic
+    conn = http.client.HTTPConnection(args.host, args.port, timeout=30)
+    conn.request("GET", "/metrics")
+    resp = conn.getresponse()
+    text = resp.read().decode()
+    conn.close()
+    assert resp.status == 200, resp.status
+    for needle in (
+        "engine_requests_finished_total 2",
+        "engine_tokens_out_total 16",
+        "# TYPE engine_ttft_seconds histogram",
+    ):
+        assert needle in text, f"missing {needle!r} in /metrics"
+    print("[sse-smoke] /metrics accounted for both requests; all checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,18 @@ sharded-vs-replicated state matrix).  ``--metrics-json`` / ``--trace-out``
 dump the observability layer's registry snapshot and Chrome trace after the
 drain, and ``--profile`` turns on per-phase dispatch timing (see
 docs/observability.md).
+
+``--http`` switches from the synthetic closed-loop drive to the always-on
+service: an asyncio stepping loop (``serving.async_engine``) plus a
+stdlib HTTP/SSE front-end (``serving.http``) on ``--host``/``--port`` —
+``POST /v1/generate`` streams tokens as Server-Sent Events, ``GET /metrics``
+exposes the Prometheus registry, ``GET /stats`` / ``GET /healthz`` serve
+JSON.  ``--policy slo|fcfs`` selects the scheduler: ``slo`` (default) orders
+by per-request ``priority``/``deadline_s`` and preempts lower-priority work
+under pool pressure; ``fcfs`` ignores SLO knobs.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --http \\
+        --port 8731 --prefill-budget 16
 """
 
 from __future__ import annotations
@@ -102,6 +114,19 @@ def main() -> None:
         help="bracket each jitted dispatch with block_until_ready so step "
         "latency decomposes by phase (adds host syncs; off by default)",
     )
+    ap.add_argument(
+        "--policy", default="slo", choices=("slo", "fcfs"),
+        help="scheduler policy: 'slo' honors priority/deadline_s and "
+        "preempts under pressure; 'fcfs' is strict arrival order",
+    )
+    ap.add_argument(
+        "--http", action="store_true",
+        help="serve an always-on HTTP/SSE front-end instead of draining a "
+        "synthetic batch (POST /v1/generate streams tokens; GET /metrics, "
+        "/stats, /healthz)",
+    )
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
     args = ap.parse_args()
 
     cfg = reduce_for_smoke(get_config(args.arch))
@@ -129,11 +154,23 @@ def main() -> None:
         attn_impl=args.attn_impl,
         prefix_cache=False if args.no_prefix_cache else None,
         prefill_budget=args.prefill_budget,
+        policy=args.policy,
         spec_decode=args.spec_decode,
         spec_k=args.spec_k,
         profile=args.profile,
         trace_capacity=65536 if args.trace_out else 4096,
     )
+
+    if args.http:
+        import asyncio
+
+        from repro.serving.http import serve_http
+
+        try:
+            asyncio.run(serve_http(eng, host=args.host, port=args.port))
+        except KeyboardInterrupt:
+            print("[serve] shutting down")
+        return
 
     rng = random.Random(args.seed)
     system = [rng.randrange(2, cfg.vocab_size) for _ in range(args.shared_prefix)]

@@ -1,4 +1,7 @@
+from repro.serving.async_engine import AsyncEngine, StreamEvent
 from repro.serving.engine import InferenceEngine, Request, RequestState, binary_chunks
+from repro.serving.http import HttpFrontend, serve_http
+from repro.serving.scheduler import POLICIES, SchedulerCore
 from repro.serving.metrics import (
     Counter,
     EnergyBridge,
@@ -29,6 +32,12 @@ __all__ = [
     "InferenceEngine",
     "Request",
     "RequestState",
+    "SchedulerCore",
+    "POLICIES",
+    "AsyncEngine",
+    "StreamEvent",
+    "HttpFrontend",
+    "serve_http",
     "BlockAllocator",
     "OutOfBlocks",
     "PartialHit",

@@ -60,9 +60,17 @@ Per-step sampling is one jitted whole-batch dispatch
 The allocator's free list is auto-defragmented when ``fragmentation()``
 exceeds ``defrag_threshold`` after frees (``defrag_triggers`` in stats).
 
-Online vs offline QoS (paper §IV.F): the queue is kept in admission order by
-a priority-aware insert — online requests ahead of offline backfill, FCFS
-within each class — instead of re-sorting per admission pass.
+Scheduling (``serving.scheduler.SchedulerCore``): queue ordering, admission,
+chunked-prefill budgeting, spec-decode windows and SLO-aware **preemption**
+live in an extracted scheduler core that drives this engine through a narrow
+ops surface (``try_admit`` / ``run_chunk`` / ``finish_prefill`` /
+``preempt`` / ...).  The default ``policy="slo"`` orders by (priority desc,
+online first, earliest deadline, FCFS) — with default knobs exactly the
+paper §IV.F online-ahead-of-offline-backfill order — and under pool/slot
+pressure evicts a strictly-lower-priority running request (its blocks are
+registered into the prefix index and parked in the LRU pool, so the resumed
+request recovers its committed context as a prefix hit instead of
+recomputing it).  ``policy="fcfs"`` ignores SLO knobs and never preempts.
 
 **Tensor parallelism** (``mesh=``, ``parallel=``): one engine instance can
 span the devices of a ``(data=1, model=tp)`` mesh (the paper's 4-way
@@ -98,8 +106,6 @@ from __future__ import annotations
 import itertools
 import time
 import warnings
-from dataclasses import dataclass, field
-from enum import Enum
 from typing import Optional
 
 import jax
@@ -131,6 +137,12 @@ from repro.serving.metrics import EnergyBridge, MetricsRegistry
 from repro.serving.paged import BlockAllocator, blocks_needed, truncate_blocks
 from repro.serving.prefix import PrefixIndex
 from repro.serving.sampler import sample_token, sample_tokens, spec_accept
+from repro.serving.scheduler import (  # re-exported for back-compat
+    Request,
+    RequestState,
+    SchedulerCore,
+    binary_chunks,
+)
 from repro.serving.spec_decode import DraftModel, make_draft_config, ngram_draft
 from repro.serving.trace import SCHEDULER_TRACK, Tracer, slot_track
 
@@ -145,75 +157,6 @@ _block_until_ready = jax.block_until_ready
 # families prefill at exact prompt length (one trace per length).
 BUCKETED_FAMILIES = ("dense", "moe", "vlm")
 MIN_PREFILL_BUCKET = 8
-
-
-def binary_chunks(n: int) -> list[int]:
-    """Split ``n`` tokens into power-of-two chunk sizes, largest first
-    (e.g. 52 -> [32, 16, 4]).  Chunk lengths drawn from a log-bounded set
-    keep the jitted ``prefill_step`` trace count O(log max_seq) without any
-    pad tokens — padding would perturb MoE expert-capacity routing."""
-    out = []
-    bit = 1 << max(n.bit_length() - 1, 0)
-    while n > 0:
-        if n >= bit:
-            out.append(bit)
-            n -= bit
-        bit >>= 1
-    return out
-
-
-class RequestState(Enum):
-    WAITING = "waiting"
-    ACTIVE = "active"
-    DONE = "done"
-
-
-@dataclass
-class Request:
-    req_id: int
-    prompt: list[int]
-    max_new_tokens: int = 32
-    online: bool = True  # online requests admit before offline ones
-    temperature: float = 0.0
-    top_k: int = 0  # 0 = full softmax (only applies when temperature > 0)
-    state: RequestState = RequestState.WAITING
-    generated: list[int] = field(default_factory=list)
-    slot: Optional[int] = None
-    blocks: list[int] = field(default_factory=list)  # paged: owned physical blocks
-    freed_blocks: int = 0  # paged: leading blocks already reclaimed (sliding window)
-    prefill_pos: int = 0  # chunked: prompt tokens already in the cache
-    prefilling: bool = False  # chunked: admitted but prompt not fully processed
-    prefix_hit_tokens: int = 0  # prompt tokens served from the prefix cache
-    reg_block: int = 0  # prefix registration resume point (block index, ...
-    reg_parent: int = 0  # ... chain hash) — registration is incremental
-    # timestamps come from the engine's injectable clock (metrics.ManualClock
-    # in tests), not time.monotonic directly — latencies are assertable
-    submit_t: float = 0.0
-    admit_t: Optional[float] = None
-    first_token_t: Optional[float] = None
-    done_t: Optional[float] = None
-    energy_j: float = 0.0  # IT-side joules attributed to this request
-    step_work: int = 0  # tokens computed this step (energy attribution; reset per step)
-
-    @property
-    def ttft(self) -> Optional[float]:
-        return None if self.first_token_t is None else self.first_token_t - self.submit_t
-
-    @property
-    def queue_wait(self) -> Optional[float]:
-        return None if self.admit_t is None else self.admit_t - self.submit_t
-
-    @property
-    def tpot(self) -> Optional[float]:
-        """Mean inter-token time after the first token (finished requests
-        with >= 2 generated tokens)."""
-        if self.done_t is None or self.first_token_t is None or len(self.generated) < 2:
-            return None
-        return (self.done_t - self.first_token_t) / (len(self.generated) - 1)
-
-    @property
-    def joules_per_token(self) -> Optional[float]:
-        return self.energy_j / len(self.generated) if self.generated else None
 
 
 class InferenceEngine:
@@ -234,6 +177,7 @@ class InferenceEngine:
         attn_impl: str = "xla",
         prefix_cache: Optional[bool] = None,
         prefill_budget: int = 0,
+        policy: str = "slo",
         defrag_threshold: float = 0.5,
         spec_decode: str = "off",
         spec_k: int = 4,
@@ -301,6 +245,8 @@ class InferenceEngine:
         self._c_drafted = M.counter("engine_spec_drafted_total", "speculative candidate tokens proposed")
         self._c_accepted = M.counter("engine_spec_accepted_total", "speculative candidate tokens committed")
         self._c_energy = M.counter("engine_energy_joules_total", "IT-side joules charged to serving steps")
+        self._c_preempted = M.counter("engine_preemptions_total", "scheduler evictions of running requests")
+        self._c_deadline_miss = M.counter("engine_deadline_violations_total", "finished requests whose TTFT missed deadline_s")
         self._h_queue_wait = M.histogram("engine_queue_wait_seconds", "submit to admission")
         self._h_ttft = M.histogram("engine_ttft_seconds", "submit to first generated token")
         self._h_admit_first = M.histogram("engine_admit_to_first_token_seconds", "admission to first generated token")
@@ -377,7 +323,11 @@ class InferenceEngine:
                 RuntimeWarning,
                 stacklevel=2,
             )
-        self.prefill_budget = prefill_budget
+        # scheduling brain: queue ordering (SLO/FCFS), admission, preemption
+        # decisions and the chunked-prefill budget live in the extracted
+        # SchedulerCore; the engine provides the execution primitives
+        # (try_admit / run_chunk / finish_prefill / preempt / ...) below
+        self.scheduler = SchedulerCore(self, policy=policy, prefill_budget=prefill_budget)
         self.defrag_threshold = defrag_threshold
 
         # speculative decoding rides on the chunked verify path: the k drafted
@@ -478,9 +428,14 @@ class InferenceEngine:
 
         self.pos = np.full((max_batch,), 0, np.int32)  # next position per slot
         self.slots: list[Optional[Request]] = [None] * max_batch
-        self.queue: list[Request] = []
         self.done: list[Request] = []
-        self._prefilling: list[Request] = []  # chunked: admission (FCFS) order
+        self._preempted_ids: set[int] = set()  # distinct requests ever evicted
+        self.deadline_violations = 0  # finished with ttft > deadline_s
+        # streaming hooks (serving.async_engine): called synchronously on the
+        # stepping thread — on_token(req, new_tokens) per emission batch,
+        # on_finish(req) when a request completes
+        self.on_token = None
+        self.on_finish = None
         self._ids = itertools.count()
         self._key = jax.random.PRNGKey(seed)
         # explicit NamedSharding out-specs under a mesh: the cache tree keeps
@@ -553,6 +508,24 @@ class InferenceEngine:
         self.spec_emitted = 0  # tokens emitted via the speculative path
 
     # ------------------------------------------------------------------
+    @property
+    def queue(self) -> list[Request]:
+        """Waiting requests in policy order — owned by the scheduler core."""
+        return self.scheduler.queue
+
+    @property
+    def _prefilling(self) -> list[Request]:
+        return self.scheduler.prefilling
+
+    @property
+    def prefill_budget(self) -> int:
+        return self.scheduler.prefill_budget
+
+    @property
+    def has_work(self) -> bool:
+        """True while any request is waiting, prefilling or decoding."""
+        return bool(self.scheduler.queue) or any(s is not None for s in self.slots)
+
     def submit(
         self,
         prompt: list[int],
@@ -561,9 +534,17 @@ class InferenceEngine:
         online: bool = True,
         temperature: float = 0.0,
         top_k: int = 0,
+        priority: int = 0,
+        deadline_s: Optional[float] = None,
     ) -> Request:
         if not prompt:
             raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens={max_new_tokens} (need >= 1)")
+        if priority < 0:
+            raise ValueError(f"priority={priority} (need >= 0)")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s={deadline_s} (need > 0, or None)")
         total = len(prompt) + max_new_tokens
         if self.cache_kind == "paged":
             span = total + self._spec_extra  # worst case + speculative headroom
@@ -586,17 +567,13 @@ class InferenceEngine:
             prompt=list(prompt),
             max_new_tokens=max_new_tokens,
             online=online,
+            priority=priority,
+            deadline_s=deadline_s,
             temperature=temperature,
             top_k=top_k,
             submit_t=self._clock(),
         )
-        # priority-aware insert keeps the queue in admission order (online
-        # first, FCFS within each class) — no per-admission re-sort
-        if req.online:
-            idx = next((i for i, r in enumerate(self.queue) if not r.online), len(self.queue))
-            self.queue.insert(idx, req)
-        else:
-            self.queue.append(req)
+        self.scheduler.enqueue(req)
         self._c_submitted.inc()
         self._g_queue.set(len(self.queue))
         self.tracer.instant(
@@ -605,11 +582,89 @@ class InferenceEngine:
             req_id=req.req_id,
             prompt_len=len(req.prompt),
             online=online,
+            priority=priority,
         )
         return req
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
+
+    # ---- scheduler ops surface (see SchedulerCore's table) -----------
+    def free_slots(self) -> list[int]:
+        return self._free_slots()
+
+    def running(self) -> list[Request]:
+        """Requests holding a slot (decoding or mid-prefill)."""
+        return [r for r in self.slots if r is not None]
+
+    def chunked(self) -> bool:
+        return self._chunked
+
+    def can_preempt(self) -> bool:
+        # eviction+resume rides the chunk-resumable paged path: the resumed
+        # context re-prefills in chunks (recurrent states can't)
+        return self._chunked
+
+    def try_admit(self, req: Request, slot: int) -> bool:
+        admit = self._admit_chunked if self._chunked else self._admit_blocking
+        return admit(req, slot)
+
+    def preempt(self, req: Request) -> None:
+        """Evict a running request: park its committed K/V in the prefix
+        cache (LRU pool), free everything else, clear its slot and mark it
+        WAITING so the scheduler can requeue it.
+
+        The cache holds K/V for positions ``[0, written)`` — for a decoding
+        request ``written = len(ctx) - 1`` (the trailing generated token is
+        not yet fed), for a mid-prefill one ``written = prefill_pos``.  Full
+        blocks of that span are registered into the prefix index before
+        release, so re-admission recovers them as a prefix hit; the partial
+        tail block and unused reserve free eagerly and are recomputed on
+        resume.
+        """
+        slot = req.slot
+        written = int(req.prefill_pos if req.prefilling else self.pos[slot])
+        if self.prefix is not None and req.freed_blocks == 0:
+            # index the committed context (prompt + generated) up to the
+            # written position — sliding-window requests skip this: their
+            # leading blocks are gone, the chain can't start at the root
+            req.reg_block, req.reg_parent = self.prefix.register(
+                req.context(),
+                req.blocks,
+                written,
+                start_block=req.reg_block,
+                parent=req.reg_parent,
+            )
+        kept, tail = truncate_blocks(req.blocks, written, self.block_size)
+        if tail:
+            self.allocator.free(tail)
+        self._release_blocks(kept[req.freed_blocks :])
+        req.blocks = []
+        req.freed_blocks = 0
+        req.prefill_pos = 0
+        req.prefilling = False
+        req.reg_block = 0
+        req.reg_parent = 0
+        req.state = RequestState.WAITING
+        req.slot = None
+        req.preemptions += 1
+        self._preempted_ids.add(req.req_id)
+        self._c_preempted.inc()
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.tbl[slot] = 0  # null block
+        self._tbl_dirty = True
+        self.cache = clear_block_row(self.cfg, self.cache, slot)
+        if self._draft is not None:
+            self._draft.reset(slot)
+        self.tracer.instant(
+            "preempt",
+            track=slot_track(slot),
+            req_id=req.req_id,
+            committed_tokens=written,
+            generated=len(req.generated),
+            priority=req.priority,
+        )
 
     # ------------------------------------------------------------------
     def _bucket_len(self, n: int) -> int:
@@ -669,6 +724,18 @@ class InferenceEngine:
             prefix_hit_tokens=req.prefix_hit_tokens,
             blocks=len(req.blocks),
         )
+        if req.preemptions:
+            # re-admission of a previously evicted request: its committed
+            # context streams back in (mostly from the prefix cache) and
+            # decode continues without re-emitting the first token
+            self.tracer.instant(
+                "resume",
+                track=slot_track(slot),
+                req_id=req.req_id,
+                preemptions=req.preemptions,
+                generated=len(req.generated),
+                recovered_tokens=req.prefill_pos,
+            )
 
     def _release_blocks(self, blocks: list[int]) -> None:
         """Drop this request's references; the prefix index parks indexed
@@ -681,13 +748,20 @@ class InferenceEngine:
             self.allocator.free(blocks)
 
     def _admit_chunked(self, req: Request, slot: int) -> bool:
-        """Prefix-matched, block-budgeted admission (no model call: prompt
+        """Prefix-matched, block-budgeted admission (no model call: context
         chunks run inside subsequent ``step()`` prefill budgets).  Returns
-        False when the pool can't cover the request's unshared blocks."""
+        False when the pool can't cover the request's unshared blocks.
+
+        A resumed (previously preempted) request admits through the same
+        path with its committed context ``prompt + generated`` in place of
+        the prompt: the blocks its eviction parked in the prefix LRU match
+        here, so the preempted work is mostly recovered rather than
+        recomputed."""
         needed = blocks_needed(
             len(req.prompt) + req.max_new_tokens + self._spec_extra, self.block_size
         )
-        full, partial = self.prefix.match(req.prompt) if self.prefix else ([], None)
+        ctx = req.context()
+        full, partial = self.prefix.match(ctx) if self.prefix else ([], None)
         need_new = needed - len(full)
         if self.prefix is not None:
             # pin matched blocks first so the free-count check below can't
@@ -719,7 +793,7 @@ class InferenceEngine:
         if matched:
             self.prefix_hits += 1
             self.prefix_hit_tokens += matched
-            req.prefix_hit_tokens = matched
+            req.prefix_hit_tokens += matched  # accumulates across resumes
             self._c_prefix_hit.inc(matched)
         if self.prefix is not None:
             # registration resumes after the matched (already indexed) blocks
@@ -730,6 +804,7 @@ class InferenceEngine:
         req.state = RequestState.ACTIVE
         req.slot = slot
         self.slots[slot] = req
+        self.peak_active = max(self.peak_active, sum(r is not None for r in self.slots))
         self.pos[slot] = matched
         if self._draft is not None:
             self._draft.reset(slot)
@@ -775,30 +850,10 @@ class InferenceEngine:
         req.state = RequestState.ACTIVE
         req.slot = slot
         self.slots[slot] = req
+        self.peak_active = max(self.peak_active, sum(r is not None for r in self.slots))
         # first generated token comes from the prefill logits
         self._emit_first_token(req, logits[0])
         return True
-
-    def _admit(self) -> None:
-        """Admit waiting requests into free capacity (queue is maintained
-        online-first / FCFS by ``submit``).
-
-        Paged: admission requires a free slot AND enough free blocks for the
-        request's worst case (prompt + max_new_tokens) minus whatever the
-        prefix cache already holds; when the pool is exhausted admission
-        backpressures (FCFS head-of-line) until finished requests free their
-        blocks.
-        """
-        free = self._free_slots()
-        while free and self.queue:
-            req = self.queue[0]
-            slot = free[0]
-            admit = self._admit_chunked if self._chunked else self._admit_blocking
-            if not admit(req, slot):
-                break
-            self.queue.pop(0)
-            free.pop(0)
-        self.peak_active = max(self.peak_active, sum(r is not None for r in self.slots))
 
     def _emit_first_token(self, req: Request, logits) -> None:
         self._key, sub = jax.random.split(self._key)
@@ -811,13 +866,16 @@ class InferenceEngine:
         if req.admit_t is not None:
             self._h_admit_first.observe(req.first_token_t - req.admit_t)
         self.tracer.instant("first_token", track=slot_track(req.slot), req_id=req.req_id)
+        if self.on_token is not None:
+            self.on_token(req, [tok])
         self._finish_if_done(req)
 
     # ------------------------------------------------------------------
-    def _run_chunk(self, req: Request, c: int):
-        """Run one c-token prompt chunk; returns the chunk's last logits."""
+    def run_chunk(self, req: Request, c: int):
+        """Run one c-token context chunk; returns the chunk's last logits."""
+        ctx = req.context()
         start = req.prefill_pos
-        toks = jnp.asarray(req.prompt[start : start + c], jnp.int32)[None]
+        toks = jnp.asarray(ctx[start : start + c], jnp.int32)[None]
         row = jnp.asarray(
             make_table_row(req.blocks, self.max_blocks_per_seq), jnp.int32
         )[None]
@@ -843,9 +901,9 @@ class InferenceEngine:
         self.prefill_tokens += c
         self._c_prefill_tokens.inc(c)
         if self.prefix is not None:
-            # index the newly-completed full prompt blocks (written above)
+            # index the newly-completed full context blocks (written above)
             req.reg_block, req.reg_parent = self.prefix.register(
-                req.prompt,
+                ctx,
                 req.blocks,
                 req.prefill_pos,
                 start_block=req.reg_block,
@@ -853,30 +911,17 @@ class InferenceEngine:
             )
         return logits
 
-    def _prefill_step(self) -> None:
-        """Spend this step's prefill token budget on the oldest admitted
-        prompts (FCFS).  ``prefill_budget <= 0`` drains every pending prompt
-        (the blocking-throughput configuration); a positive budget bounds
-        prefill work per step so decode latency stays flat while long
-        prompts stream in."""
-        budget = self.prefill_budget if self.prefill_budget > 0 else float("inf")
-        while self._prefilling and budget > 0:
-            req = self._prefilling[0]
-            remaining = len(req.prompt) - req.prefill_pos
-            take = int(min(budget, remaining))
-            logits = None
-            for c in binary_chunks(take):
-                logits = self._run_chunk(req, c)
-            budget -= take
-            if req.prefill_pos >= len(req.prompt):
-                self._prefilling.pop(0)
-                # prompt complete: publish the block table to the decode
-                # path and sample the first token from the last chunk logits
-                self.tbl[req.slot] = make_table_row(req.blocks, self.max_blocks_per_seq)
-                self._tbl_dirty = True
-                self.pos[req.slot] = len(req.prompt)
-                req.prefilling = False
-                self._emit_first_token(req, logits[0])
+    def finish_prefill(self, req: Request, logits) -> None:
+        """Context complete: publish the block table to the decode path.
+        A fresh request samples its first token from the last chunk's
+        logits; a resumed one already holds its first token — its trailing
+        generated token is simply re-fed by the next decode step."""
+        self.tbl[req.slot] = make_table_row(req.blocks, self.max_blocks_per_seq)
+        self._tbl_dirty = True
+        self.pos[req.slot] = req.prefill_target
+        req.prefilling = False
+        if not req.generated:
+            self._emit_first_token(req, logits[0])
 
     # ------------------------------------------------------------------
     def _spec_step(self, active: list[Request]) -> int:
@@ -907,9 +952,7 @@ class InferenceEngine:
         for r in active:
             s = r.slot
             ctx = r.prompt + r.generated
-            # never draft past the generation budget: at most remaining - 1
-            # drafts so the window's +1 correction/bonus stays within max_new
-            kmax = min(K, r.max_new_tokens - len(r.generated) - 1)
+            kmax = self.scheduler.spec_window(r, K)
             if self.spec_mode == "ngram":
                 d = ngram_draft(ctx, kmax)
             else:
@@ -997,6 +1040,8 @@ class InferenceEngine:
                 accepted=na,
                 emitted=cut,
             )
+            if self.on_token is not None and emitted:
+                self.on_token(r, emitted)
             if self._draft is not None:
                 # the drafter absorbed its own provisional tokens; truncate
                 # its view to the committed prefix (divergent feeds are
@@ -1038,6 +1083,9 @@ class InferenceEngine:
             self._c_finished.inc()
             if req.tpot is not None:
                 self._h_tpot.observe(req.tpot)
+            if req.deadline_s is not None and req.ttft is not None and req.ttft > req.deadline_s:
+                self.deadline_violations += 1
+                self._c_deadline_miss.inc()
             self.tracer.instant(
                 "finish",
                 track=slot_track(slot),
@@ -1077,6 +1125,8 @@ class InferenceEngine:
                 self.cache = clear_slot(self.cfg, self.cache, slot)
             self.pos[slot] = 0
             self.done.append(req)
+            if self.on_finish is not None:
+                self.on_finish(req)
 
     # ------------------------------------------------------------------
     def _reclaim_window_blocks(self, req: Request) -> None:
@@ -1130,15 +1180,15 @@ class InferenceEngine:
         self._tbl_dirty = False
 
     def step(self) -> int:
-        """One engine iteration: admit, spend the prefill budget, then
-        advance all decoding slots one token."""
+        """One engine iteration: one scheduling pass (admission with SLO
+        preemption, then the chunked-prefill budget — see
+        ``scheduler.SchedulerCore``), then advance all decoding slots."""
         t0 = self._clock()
         done0 = len(self.done)
         if self._profile:
             self._phase_acc = {}
-        self._admit()
-        if self._chunked:
-            self._prefill_step()
+        self.scheduler.schedule()
+        self.peak_active = max(self.peak_active, sum(r is not None for r in self.slots))
         active = [r for r in self.slots if r is not None and not r.prefilling]
         produced = 0
         if active and self.spec_mode != "off":
@@ -1176,12 +1226,15 @@ class InferenceEngine:
                 ).observe(dt)
                 self._phase_acc["sample"] = self._phase_acc.get("sample", 0.0) + dt
             for r in active:
-                r.generated.append(int(sampled[r.slot]))
+                tok = int(sampled[r.slot])
+                r.generated.append(tok)
                 self.pos[r.slot] += 1
                 produced += 1
                 self.tokens_out += 1
                 self._c_tokens.inc()
                 r.step_work += 1
+                if self.on_token is not None:
+                    self.on_token(r, [tok])
                 if self.cache_kind == "paged":
                     self._reclaim_window_blocks(r)
                 self._finish_if_done(r)
@@ -1220,8 +1273,12 @@ class InferenceEngine:
             r.step_work = 0
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        """Closed-loop drain: step the scheduler core until no request is
+        waiting, prefilling or decoding.  A thin wrapper over the same
+        ``step()`` the always-on ``serving.async_engine`` loop drives —
+        batch drains and streaming service exercise one code path."""
         for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
+            if not self.has_work:
                 break
             self.step()
         else:
@@ -1282,6 +1339,10 @@ class InferenceEngine:
         ttfts = [r.ttft for r in self.done if r.ttft is not None]
         s = {
             "cache_kind": self.cache_kind,
+            "scheduler_policy": self.scheduler.policy,
+            "preemptions": self.scheduler.preemptions,
+            "requests_preempted": len(self._preempted_ids),
+            "deadline_violations": self.deadline_violations,
             "requests_done": len(self.done),
             "requests_queued": len(self.queue),
             "requests_active": sum(r is not None and not r.prefilling for r in self.slots),

@@ -1,0 +1,246 @@
+"""Stdlib HTTP/SSE front-end over the always-on async engine.
+
+The paper's users reach Isambard-AI through web front-ends, so the serving
+stack terminates HTTP itself: one ``asyncio.start_server`` acceptor shares
+the event loop with ``AsyncEngine``'s stepping task — no framework, no extra
+dependency, one process.  Endpoints:
+
+* ``POST /v1/generate`` — body ``{"prompt": [ints], "max_new_tokens": 16,
+  "temperature": 0.0, "top_k": 0, "priority": 0, "deadline_s": null,
+  "online": true, "stream": true}``.  With ``stream`` (the default) the
+  response is Server-Sent Events: one ``event: token`` frame per emission
+  batch (``data`` carries ``{"tokens": [...], "index": N}``) and a final
+  ``event: done`` frame with the finish summary; the connection closes
+  after ``done`` (``Connection: close`` — no chunked framing needed).
+  With ``"stream": false`` the full completion returns as one JSON object.
+* ``GET /metrics`` — the registry in Prometheus text exposition format.
+* ``GET /stats`` — ``engine.stats()`` as JSON.
+* ``GET /healthz`` — liveness probe.
+
+Request knob validation happens in ``engine.submit`` (negative
+``max_new_tokens``/``priority``, non-positive ``deadline_s``, empty or
+oversized prompts) and surfaces as a 400 with the error message.
+
+The parser handles exactly what the front-end needs — request line, headers,
+``Content-Length`` bodies — and rejects everything else; it is a serving
+research harness, not a hardened proxy (deploy behind one for anything
+public-facing).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+from typing import Optional
+
+from repro.serving.async_engine import AsyncEngine
+
+MAX_HEADER_BYTES = 16384
+MAX_BODY_BYTES = 4 * 1024 * 1024
+
+_STATUS = {
+    200: "OK",
+    400: "Bad Request",
+    404: "Not Found",
+    405: "Method Not Allowed",
+    413: "Payload Too Large",
+    500: "Internal Server Error",
+}
+
+
+def _head(status: int, content_type: str, *, length: Optional[int] = None) -> bytes:
+    lines = [
+        f"HTTP/1.1 {status} {_STATUS.get(status, 'Unknown')}",
+        f"Content-Type: {content_type}",
+        "Connection: close",
+        "Cache-Control: no-store",
+    ]
+    if length is not None:
+        lines.append(f"Content-Length: {length}")
+    return ("\r\n".join(lines) + "\r\n\r\n").encode()
+
+
+def _sse_frame(event: str, data: dict) -> bytes:
+    return f"event: {event}\ndata: {json.dumps(data)}\n\n".encode()
+
+
+async def _respond_json(writer: asyncio.StreamWriter, status: int, obj: dict) -> None:
+    body = (json.dumps(obj) + "\n").encode()
+    writer.write(_head(status, "application/json", length=len(body)) + body)
+    await writer.drain()
+
+
+async def _read_request(reader: asyncio.StreamReader):
+    """Parse one request: (method, path, headers, body) or None on EOF."""
+    head = await reader.readuntil(b"\r\n\r\n")
+    if len(head) > MAX_HEADER_BYTES:
+        raise ValueError("headers too large")
+    lines = head.decode("latin-1").split("\r\n")
+    method, path, _ = lines[0].split(" ", 2)
+    headers = {}
+    for ln in lines[1:]:
+        if ":" in ln:
+            k, v = ln.split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+    n = int(headers.get("content-length", 0))
+    if n > MAX_BODY_BYTES:
+        raise ValueError("body too large")
+    body = await reader.readexactly(n) if n else b""
+    return method, path, headers, body
+
+
+class HttpFrontend:
+    """One-process HTTP/SSE service over an ``AsyncEngine``.
+
+    ``port=0`` binds an ephemeral port (tests); after ``start()`` the bound
+    port is in ``self.port``.
+    """
+
+    def __init__(self, async_engine: AsyncEngine, host: str = "127.0.0.1", port: int = 8080):
+        self.async_engine = async_engine
+        self.host = host
+        self.port = port
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> None:
+        self.async_engine.start()
+        self._server = await asyncio.start_server(self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        await self.async_engine.stop()
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "call start() first"
+        async with self._server:
+            await self._server.serve_forever()
+
+    # -- request handling ----------------------------------------------
+    async def _handle(self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter) -> None:
+        try:
+            try:
+                parsed = await _read_request(reader)
+            except (asyncio.IncompleteReadError, ConnectionError):
+                return
+            except (ValueError, asyncio.LimitOverrunError) as e:
+                await _respond_json(writer, 400, {"error": str(e)})
+                return
+            method, path, _, body = parsed
+            if path == "/healthz":
+                await _respond_json(writer, 200, {"ok": True})
+            elif path == "/metrics":
+                if method != "GET":
+                    await _respond_json(writer, 405, {"error": "GET only"})
+                    return
+                text = self.async_engine.engine.metrics.render_text().encode()
+                writer.write(_head(200, "text/plain; version=0.0.4", length=len(text)) + text)
+                await writer.drain()
+            elif path == "/stats":
+                await _respond_json(writer, 200, self.async_engine.engine.stats())
+            elif path == "/v1/generate":
+                if method != "POST":
+                    await _respond_json(writer, 405, {"error": "POST only"})
+                    return
+                await self._generate(writer, body)
+            else:
+                await _respond_json(writer, 404, {"error": f"no route {path}"})
+        except ConnectionError:
+            pass  # client went away mid-stream
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except ConnectionError:
+                pass
+
+    async def _generate(self, writer: asyncio.StreamWriter, body: bytes) -> None:
+        try:
+            payload = json.loads(body.decode() or "{}")
+            if not isinstance(payload, dict):
+                raise ValueError("body must be a JSON object")
+            prompt = payload.get("prompt")
+            if not isinstance(prompt, list) or not all(isinstance(t, int) for t in prompt):
+                raise ValueError("prompt must be a list of token ids")
+            kw = dict(
+                max_new_tokens=int(payload.get("max_new_tokens", 16)),
+                online=bool(payload.get("online", True)),
+                temperature=float(payload.get("temperature", 0.0)),
+                top_k=int(payload.get("top_k", 0)),
+                priority=int(payload.get("priority", 0)),
+                deadline_s=(
+                    None if payload.get("deadline_s") is None else float(payload["deadline_s"])
+                ),
+            )
+            stream = bool(payload.get("stream", True))
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            await _respond_json(writer, 400, {"error": str(e)})
+            return
+
+        if not stream:
+            try:
+                final, toks = await self.async_engine.generate(prompt, **kw)
+            except ValueError as e:  # submit() validation
+                await _respond_json(writer, 400, {"error": str(e)})
+                return
+            await _respond_json(
+                writer,
+                200,
+                {
+                    "req_id": final.req_id,
+                    "tokens": toks,
+                    "reason": final.reason,
+                    "ttft_s": final.ttft_s,
+                    "preemptions": final.preemptions,
+                },
+            )
+            return
+
+        gen = self.async_engine.submit_stream(prompt, **kw)
+        try:
+            first = await gen.__anext__()
+        except ValueError as e:  # submit() validation
+            await _respond_json(writer, 400, {"error": str(e)})
+            return
+        # headers go out only once submission succeeded; each event frame is
+        # drained immediately so tokens reach the client as they are emitted
+        writer.write(_head(200, "text/event-stream"))
+        await writer.drain()
+        ev = first
+        while True:
+            if ev.kind == "token":
+                writer.write(
+                    _sse_frame("token", {"req_id": ev.req_id, "tokens": list(ev.tokens), "index": ev.index})
+                )
+            else:
+                writer.write(
+                    _sse_frame(
+                        "done",
+                        {
+                            "req_id": ev.req_id,
+                            "reason": ev.reason,
+                            "n_tokens": ev.n_tokens,
+                            "ttft_s": ev.ttft_s,
+                            "preemptions": ev.preemptions,
+                        },
+                    )
+                )
+            await writer.drain()
+            if ev.kind == "finish":
+                break
+            ev = await gen.__anext__()
+
+
+async def serve_http(engine, host: str = "127.0.0.1", port: int = 8080) -> None:
+    """Blocking entry: wrap ``engine`` in an AsyncEngine + HttpFrontend and
+    serve until cancelled (``launch.serve --http``)."""
+    front = HttpFrontend(AsyncEngine(engine), host=host, port=port)
+    await front.start()
+    print(f"[serve] http/sse listening on http://{front.host}:{front.port}", flush=True)
+    try:
+        await front.serve_forever()
+    finally:
+        await front.stop()

@@ -3,7 +3,8 @@
 Answers the question the flat counters can't: *where did this request's
 latency go?*  The engine records structured events — submit, admit (with
 prefix-hit detail), every prefill chunk, first token, speculative
-accept/reject, rollback, eviction, finish — into a bounded ring buffer with
+accept/reject, rollback, eviction, SLO preempt/resume, finish — into a
+bounded ring buffer with
 an injectable monotonic clock (the same clock as ``serving.metrics``), so a
 drained run replays as a per-request timeline.
 
