@@ -47,7 +47,26 @@ harness serves a reduced model through the continuous-batching engine:
   exact and machine-independent.  The SLO arm must beat FCFS on
   high-priority p99 TTFT at equal offered load with >= 1 preemption
   recorded (asserted here and by the CI ``async-serving`` job from
-  ``benchmarks/results/llm_inference_openloop.json``).
+  ``benchmarks/results/llm_inference_openloop.json``).  Deadline
+  *enforcement* shows up as an A/B too: under FCFS the interactive
+  requests that cannot make their TTFT deadline are aborted
+  (``deadline_exceeded``) instead of served late; the SLO arm aborts none.
+
+* **multi-replica router** (``--router``) — N independent engines behind
+  the prefix-affinity ``serving.router.Router``, driven closed-loop on
+  virtual time where a fleet round costs the *slowest* replica's step
+  (replicas run in parallel in real deployments).  Four arms over a
+  multi-tenant workload (4 tenant families, each sharing a distinct
+  3-block system prompt): 1 replica; 2 replicas with affinity routing
+  (must scale aggregate tok/s > 1.3x and keep the prefix hit rate within
+  10 points of single-replica); 2 replicas with random routing (the
+  affinity arm must beat its hit rate — random placement splits tenant
+  families across replicas and re-prefills the family prefix on each);
+  and a chaos arm where a ``FaultPlan`` kills one replica mid-run — every
+  in-flight request must fail over and finish with greedy output
+  **token-identical** to the no-failure run, zero requests lost (asserted
+  here and by the CI ``router-serving`` job from
+  ``benchmarks/results/llm_inference_router.json``).
 
 Results are also written to ``benchmarks/results/llm_inference.json`` (the
 CI smoke step asserts the shared-prefix scenario parses and reports a
@@ -112,8 +131,10 @@ def _drive(eng, prompts=None, *, max_new=MAX_NEW) -> dict:
 
 
 def _shared_prefix_prompts() -> list[list[int]]:
+    # tail ids stay under the smoke vocab (256) — out-of-range ids hit the
+    # embedding gather's clamp/garbage path and can poison logits with NaN
     system = [(7 * j + 3) % 199 + 2 for j in range(SYSTEM_PROMPT_LEN)]
-    return [system + [200 + i * UNIQUE_TAIL + t for t in range(UNIQUE_TAIL)] for i in range(N_REQUESTS)]
+    return [system + [190 + i * UNIQUE_TAIL + t for t in range(UNIQUE_TAIL)] for i in range(N_REQUESTS)]
 
 
 def run(trace_out: str | None = None) -> list[dict]:
@@ -377,11 +398,13 @@ def run_openloop() -> list[dict]:
                 "preemptions": s["preemptions"],
                 "requests_preempted": s["requests_preempted"],
                 "deadline_violations": s["deadline_violations"],
+                "requests_aborted": s["requests_aborted"],
                 "requests_done": s["requests_done"],
                 "derived": (
                     f"hi_p99_ttft_ms={s['high_priority_ttft_p99_s'] * 1e3:.1f} "
                     f"preemptions={s['preemptions']} "
                     f"deadline_miss={s['deadline_violations']} "
+                    f"aborted={s['requests_aborted']} "
                     f"qps={s['qps_sustained']:.2f}"
                 ),
             }
@@ -396,8 +419,158 @@ def run_openloop() -> list[dict]:
         f"{fcfs['high_priority_ttft_p99_s']:.3f}s"
     )
     assert slo["deadline_violations"] <= fcfs["deadline_violations"]
+    # deadline *enforcement*: FCFS requests that cannot make their TTFT
+    # deadline are shed (deadline_exceeded abort) instead of served late;
+    # SLO preemption keeps every interactive request inside its deadline
+    assert slo["requests_aborted"] == 0, "SLO arm must serve every request in time"
+    assert fcfs["requests_aborted"] >= 1, "FCFS must shed hopeless deadline requests"
     RESULTS_DIR.mkdir(exist_ok=True)
     (RESULTS_DIR / "llm_inference_openloop.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+# ---- multi-replica router: affinity, scaling, failover --------------------
+ROUTER_TENANTS = 8
+ROUTER_PER_TENANT = 2
+ROUTER_MAX_NEW = 12
+
+
+def _tenant_prompts() -> list[list[int]]:
+    """ROUTER_TENANTS families, each sharing a distinct 48-token system
+    prompt (3 full blocks), interleaved in submission order — the
+    multi-tenant shape where placement matters: affinity keeps a family on
+    one replica (its prefix blocks are hot there), random placement splits
+    it and pays the family prefill on every replica it lands on."""
+    prompts = []
+    for i in range(ROUTER_PER_TENANT):
+        for t in range(ROUTER_TENANTS):
+            system = [(13 * t + 5 * j + 7) % 197 + 2 for j in range(SYSTEM_PROMPT_LEN)]
+            # tails stay under the smoke vocab (256): 4 unique ids per request
+            tail = [192 + (t * ROUTER_PER_TENANT + i) * UNIQUE_TAIL + k for k in range(UNIQUE_TAIL)]
+            prompts.append(system + tail)
+    return prompts
+
+
+def _make_router(cfg, params, n, *, clock, policy="affinity", fault_plans=None):
+    from repro.serving import Replica, Router
+
+    replicas = []
+    for i in range(n):
+        eng = InferenceEngine(
+            cfg,
+            params,
+            max_batch=4,
+            max_seq=MAX_SEQ,
+            cache_kind="paged",
+            block_size=BLOCK_SIZE,
+            prefix_cache=True,
+            prefill_budget=16,
+            clock=clock,
+        )
+        replicas.append(Replica(i, eng, clock=clock, fault_plan=(fault_plans or {}).get(i)))
+    return Router(replicas, policy=policy, clock=clock)
+
+
+def _replica_work(eng) -> int:
+    return eng.prefill_tokens + eng.verify_tokens + eng.tokens_out
+
+
+def _drive_router(router, clock: ManualClock, prompts) -> tuple[dict, list]:
+    """Closed-loop fleet drain on virtual time.
+
+    Replicas execute in parallel in a real deployment, so one fleet round
+    costs the *slowest* replica's step: fixed dispatch overhead plus the
+    per-token cost of the largest per-replica work delta that round."""
+    reqs = [router.submit(list(p), max_new_tokens=ROUTER_MAX_NEW) for p in prompts]
+    while router.has_work:
+        before = {rep.id: _replica_work(rep.engine) for rep in router.replicas}
+        router.step()
+        deltas = [_replica_work(rep.engine) - before[rep.id] for rep in router.replicas]
+        clock.advance(STEP_OVERHEAD_S + TOKEN_COST_S * max(deltas, default=0))
+    s = router.stats()
+    s["makespan_s"] = clock.now
+    s["tok_per_s"] = s["tokens_out"] / clock.now if clock.now else 0.0
+    return s, [list(r.generated) for r in reqs]
+
+
+def run_router() -> list[dict]:
+    """Router A/B: scaling, affinity-vs-random hit rate, mid-run kill."""
+    from repro.serving import FaultPlan
+
+    cfg = reduce_for_smoke(get_config("mistral-nemo-12b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = _tenant_prompts()
+    n_req = len(prompts)
+
+    def arm(n, policy="affinity", fault_plans=None):
+        clock = ManualClock()
+        router = _make_router(cfg, params, n, clock=clock, policy=policy, fault_plans=fault_plans)
+        s, toks = _drive_router(router, clock, prompts)
+        return router, s, toks
+
+    single_router, single, single_toks = arm(1)
+    aff_router, aff, aff_toks = arm(2)
+    _, rnd, rnd_toks = arm(2, policy="random")
+    # kill replica 0 halfway through the steps it executed in the healthy
+    # affinity run: requests are mid-flight there when it dies
+    crash_at = max(aff_router.replicas[0].steps // 2, 1)
+    _, fo, fo_toks = arm(2, fault_plans={0: FaultPlan(crash_at_step=crash_at)})
+
+    assert aff_toks == single_toks and rnd_toks == single_toks, (
+        "replica placement changed greedy outputs"
+    )
+    assert fo["requests_done"] == n_req and fo["requests_failed"] == 0, (
+        f"lost requests after replica kill: done={fo['requests_done']}/{n_req} "
+        f"failed={fo['requests_failed']}"
+    )
+    assert fo["failovers"] >= 1, "the kill must have forced at least one failover"
+    assert fo["replica_states"][0] == "dead"
+    assert fo_toks == single_toks, "failover changed greedy outputs vs no-failure run"
+    assert aff["tok_per_s"] > 1.3 * single["tok_per_s"], (
+        f"2 replicas must scale aggregate decode: {aff['tok_per_s']:.1f} vs "
+        f"{single['tok_per_s']:.1f} tok/s"
+    )
+    assert aff["prefix_hit_rate"] >= single["prefix_hit_rate"] - 0.10, (
+        f"affinity routing lost the prefix cache: hit rate "
+        f"{aff['prefix_hit_rate']:.2f} vs {single['prefix_hit_rate']:.2f} on 1 replica"
+    )
+    assert aff["prefix_hit_rate"] > rnd["prefix_hit_rate"], (
+        f"affinity must beat random placement on hit rate: "
+        f"{aff['prefix_hit_rate']:.2f} vs {rnd['prefix_hit_rate']:.2f}"
+    )
+
+    rows = []
+    for name, s, toks in (
+        ("router_single", single, single_toks),
+        ("router_affinity", aff, aff_toks),
+        ("router_random", rnd, rnd_toks),
+        ("router_failover", fo, fo_toks),
+    ):
+        rows.append(
+            {
+                "name": f"llm_inference_{name}_cpu",
+                "us_per_call": s["makespan_s"] / max(s["requests_done"], 1) * 1e6,
+                "replicas": s["replicas"],
+                "policy": s["routing_policy"],
+                "tok_per_s": s["tok_per_s"],
+                "makespan_s": s["makespan_s"],
+                "tokens_out": s["tokens_out"],
+                "prefix_hit_rate": s["prefix_hit_rate"],
+                "requests_done": s["requests_done"],
+                "requests_failed": s["requests_failed"],
+                "failovers": s["failovers"],
+                "retries": s["retries"],
+                "replica_states": s["replica_states"],
+                "tokens_match_single": toks == single_toks,
+                "derived": (
+                    f"tok/s={s['tok_per_s']:.1f} hit={s['prefix_hit_rate']:.2f} "
+                    f"failovers={s['failovers']:.0f} done={s['requests_done']}/{n_req}"
+                ),
+            }
+        )
+    rows[1]["speedup_vs_single"] = aff["tok_per_s"] / single["tok_per_s"]
+    RESULTS_DIR.mkdir(exist_ok=True)
+    (RESULTS_DIR / "llm_inference_router.json").write_text(json.dumps(rows, indent=1))
     return rows
 
 
@@ -478,8 +651,15 @@ def main() -> None:
         help="run the open-loop Poisson-arrival SLO-vs-FCFS A/B on virtual "
         "time instead of the closed-loop drain scenarios",
     )
+    ap.add_argument(
+        "--router", action="store_true",
+        help="run the multi-replica router A/B (scaling, affinity-vs-random "
+        "prefix hit rate, mid-run replica kill with failover) on virtual time",
+    )
     args = ap.parse_args()
-    if args.openloop:
+    if args.router:
+        rows = run_router()
+    elif args.openloop:
         rows = run_openloop()
     else:
         rows = run_tp(args.tp) if args.tp > 1 else run(trace_out=args.trace_out)

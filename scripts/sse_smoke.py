@@ -126,11 +126,19 @@ def main() -> None:
     text = resp.read().decode()
     conn.close()
     assert resp.status == 200, resp.status
-    for needle in (
-        "engine_requests_finished_total 2",
-        "engine_tokens_out_total 16",
-        "# TYPE engine_ttft_seconds histogram",
-    ):
+    # a router fleet exposes the engine registries prefixed replica<N>_ and
+    # fleet totals under router_*; a single engine exposes them bare — the
+    # smoke accepts either server shape
+    fleet = "router_requests_total" in text
+    if fleet:
+        assert "router_requests_total 2" in text, "fleet must account for both requests"
+        needles = ("replica0_engine_requests_finished_total",
+                   "# TYPE replica0_engine_ttft_seconds histogram")
+    else:
+        needles = ("engine_requests_finished_total 2",
+                   "engine_tokens_out_total 16",
+                   "# TYPE engine_ttft_seconds histogram")
+    for needle in needles:
         assert needle in text, f"missing {needle!r} in /metrics"
     print("[sse-smoke] /metrics accounted for both requests; all checks passed")
 

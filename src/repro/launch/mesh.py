@@ -9,6 +9,7 @@ before any jax import, ever builds the full mesh.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.config import MeshConfig
 
@@ -52,3 +53,36 @@ def make_serving_mesh(tp: int = 1):
             f"importing jax"
         )
     return make_local_mesh(1, tp)
+
+
+def make_replica_meshes(replicas: int, tp: int = 1) -> list:
+    """Partition the visible devices into ``replicas`` disjoint
+    ``(data=1, model=tp)`` meshes — one independent serving engine per
+    slice, the multi-replica analogue of ``make_serving_mesh``.
+
+    Replica ``i`` owns devices ``[i*tp, (i+1)*tp)``, so replicas never
+    contend for a device and one replica's failure cannot corrupt a peer's
+    state — the isolation the router's failover model assumes.  Requires
+    ``replicas * tp <= jax.device_count()``; on CPU force host devices
+    first (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    if replicas < 1:
+        raise ValueError(f"replicas={replicas} (need >= 1)")
+    if tp < 1:
+        raise ValueError(f"tp={tp} (need >= 1)")
+    need = replicas * tp
+    avail = jax.device_count()
+    if need > avail:
+        raise ValueError(
+            f"replicas={replicas} x tp={tp} needs {need} devices, have "
+            f"{avail}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} before "
+            f"importing jax"
+        )
+    devs = jax.devices()
+    return [
+        jax.sharding.Mesh(
+            np.asarray(devs[i * tp : (i + 1) * tp]).reshape(1, tp), ("data", "model")
+        )
+        for i in range(replicas)
+    ]

@@ -38,6 +38,20 @@ under pool pressure; ``fcfs`` ignores SLO knobs.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --http \\
         --port 8731 --prefill-budget 16
+
+``--replicas N`` runs N independent engines behind the prefix-affinity
+``serving.router.Router`` — each replica on its own ``(data=1, model=tp)``
+device slice when ``N*tp`` devices are visible (``launch.mesh
+.make_replica_meshes``), all sharing one device otherwise (CPU smoke).
+The router health-checks replicas, fails over in-flight requests and
+supports graceful drain; combine with ``--http`` for an always-on
+multi-replica service.  SIGTERM/SIGINT on the ``--http`` path triggers a
+graceful drain (stop admission, finish active requests) before the
+``--metrics-json`` / ``--trace-out`` flush.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --replicas 2 \\
+        --shared-prefix 32 --prefill-budget 16
 """
 
 from __future__ import annotations
@@ -94,6 +108,12 @@ def main() -> None:
         "positions of per-request block headroom)",
     )
     ap.add_argument(
+        "--replicas", type=int, default=1,
+        help="independent engine replicas behind the prefix-affinity router "
+        "(each on its own (1, tp) device slice when replicas*tp devices are "
+        "visible; health checks + failover + graceful drain)",
+    )
+    ap.add_argument(
         "--tp", type=int, default=1,
         help="tensor-parallel degree: shard params + paged KV pools over a "
         "(data=1, model=tp) mesh (CPU: set "
@@ -132,34 +152,59 @@ def main() -> None:
     cfg = reduce_for_smoke(get_config(args.arch))
     if cfg.is_encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only; no decode serving")
-    mesh = None
-    if args.tp > 1:
-        from repro.launch.mesh import make_serving_mesh
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas {args.replicas} (need >= 1)")
 
-        mesh = make_serving_mesh(args.tp)
-        print(f"[serve] tensor-parallel over {args.tp} devices: {mesh}")
+    meshes: list = [None] * args.replicas
+    if args.replicas * args.tp > 1:
+        from repro.launch.mesh import make_replica_meshes
+
+        try:
+            meshes = make_replica_meshes(args.replicas, args.tp)
+            print(
+                f"[serve] {args.replicas} replica(s) x tp={args.tp}: "
+                f"disjoint device slices"
+            )
+        except ValueError:
+            if args.tp > 1:
+                raise  # tensor parallelism genuinely needs the devices
+            print(
+                f"[serve] {args.replicas} replicas sharing "
+                f"{jax.device_count()} device(s) (host-side replication)"
+            )
+
     params = init_params(cfg, jax.random.PRNGKey(args.seed), jnp.float32)
-    eng = InferenceEngine(
-        cfg,
-        params,
-        mesh=mesh,
-        max_batch=args.max_batch,
-        max_seq=256,
-        seed=args.seed,
-        cache_kind=args.cache,
-        block_size=args.block_size,
-        num_blocks=args.num_blocks,
-        cache_dtype=DTYPES[args.cache_dtype],
-        quantize_kv=args.quantize_kv,
-        attn_impl=args.attn_impl,
-        prefix_cache=False if args.no_prefix_cache else None,
-        prefill_budget=args.prefill_budget,
-        policy=args.policy,
-        spec_decode=args.spec_decode,
-        spec_k=args.spec_k,
-        profile=args.profile,
-        trace_capacity=65536 if args.trace_out else 4096,
-    )
+
+    def build_engine(mesh):
+        return InferenceEngine(
+            cfg,
+            params,
+            mesh=mesh,
+            max_batch=args.max_batch,
+            max_seq=256,
+            seed=args.seed,
+            cache_kind=args.cache,
+            block_size=args.block_size,
+            num_blocks=args.num_blocks,
+            cache_dtype=DTYPES[args.cache_dtype],
+            quantize_kv=args.quantize_kv,
+            attn_impl=args.attn_impl,
+            prefix_cache=False if args.no_prefix_cache else None,
+            prefill_budget=args.prefill_budget,
+            policy=args.policy,
+            spec_decode=args.spec_decode,
+            spec_k=args.spec_k,
+            profile=args.profile,
+            trace_capacity=65536 if args.trace_out else 4096,
+        )
+
+    if args.replicas > 1:
+        from repro.serving import Replica, Router
+
+        replicas = [Replica(i, build_engine(meshes[i])) for i in range(args.replicas)]
+        eng = Router(replicas, trace_capacity=65536 if args.trace_out else 4096)
+    else:
+        eng = build_engine(meshes[0])
 
     if args.http:
         import asyncio
@@ -167,7 +212,15 @@ def main() -> None:
         from repro.serving.http import serve_http
 
         try:
-            asyncio.run(serve_http(eng, host=args.host, port=args.port))
+            asyncio.run(
+                serve_http(
+                    eng,
+                    host=args.host,
+                    port=args.port,
+                    metrics_json=args.metrics_json,
+                    trace_out=args.trace_out,
+                )
+            )
         except KeyboardInterrupt:
             print("[serve] shutting down")
         return
@@ -188,10 +241,13 @@ def main() -> None:
         )
     eng.run_until_drained()
     for r in reqs:
-        kind = "online " if r.online else "offline"
+        online = r.online if hasattr(r, "online") else r.kwargs.get("online", True)
+        kind = "online " if online else "offline"
         ttft = f"{r.ttft*1e3:8.1f}ms" if r.ttft is not None else "   never admitted"
-        hit = f" prefix_hit={r.prefix_hit_tokens:3d}" if r.prefix_hit_tokens else ""
-        print(f"req {r.req_id:3d} [{kind}] ttft={ttft} len={len(r.generated)}{hit} head={r.generated[:6]}")
+        hit_toks = getattr(r, "prefix_hit_tokens", 0)
+        hit = f" prefix_hit={hit_toks:3d}" if hit_toks else ""
+        rep = f" replica={r.replica_id}" if hasattr(r, "replica_id") else ""
+        print(f"req {r.req_id:3d} [{kind}] ttft={ttft} len={len(r.generated)}{hit}{rep} head={r.generated[:6]}")
     print("[serve] stats:", eng.stats())
     for name in ("engine_ttft_seconds", "engine_tpot_seconds", "engine_step_seconds"):
         p = eng.metrics.percentiles(name)

@@ -1,6 +1,9 @@
 from repro.serving.async_engine import AsyncEngine, StreamEvent
 from repro.serving.engine import InferenceEngine, Request, RequestState, binary_chunks
+from repro.serving.faults import FaultPlan, ReplicaCrashed, ServiceUnavailable
 from repro.serving.http import HttpFrontend, serve_http
+from repro.serving.replica import Replica, ReplicaState
+from repro.serving.router import ROUTING_POLICIES, Router, RouterRequest
 from repro.serving.scheduler import POLICIES, SchedulerCore
 from repro.serving.metrics import (
     Counter,
@@ -11,7 +14,7 @@ from repro.serving.metrics import (
     MetricsRegistry,
     exponential_buckets,
 )
-from repro.serving.trace import SCHEDULER_TRACK, TraceEvent, Tracer, slot_track
+from repro.serving.trace import SCHEDULER_TRACK, TraceEvent, Tracer, replica_track, slot_track
 from repro.serving.kvcache import (
     clear_block_row,
     clear_slot,
@@ -24,7 +27,7 @@ from repro.serving.kvcache import (
     write_request_into_slot,
 )
 from repro.serving.paged import BlockAllocator, OutOfBlocks, blocks_needed, truncate_blocks
-from repro.serving.prefix import PartialHit, PrefixIndex, chain_hash
+from repro.serving.prefix import PartialHit, PrefixIndex, chain_hash, routing_key
 from repro.serving.sampler import sample_token, sample_tokens, spec_accept
 from repro.serving.spec_decode import DraftModel, make_draft_config, ngram_draft
 
@@ -38,6 +41,16 @@ __all__ = [
     "StreamEvent",
     "HttpFrontend",
     "serve_http",
+    "Router",
+    "RouterRequest",
+    "ROUTING_POLICIES",
+    "Replica",
+    "ReplicaState",
+    "FaultPlan",
+    "ReplicaCrashed",
+    "ServiceUnavailable",
+    "routing_key",
+    "replica_track",
     "BlockAllocator",
     "OutOfBlocks",
     "PartialHit",

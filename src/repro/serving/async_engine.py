@@ -31,6 +31,23 @@ The closed-loop ``engine.run_until_drained()`` drives the exact same
 ``step()``; this module adds arrival/departure plumbing only, so every
 batch-mode test exercises the same scheduling and execution path the
 always-on service runs.
+
+Lifecycle extras for production service:
+
+* ``cancel(req_id)`` enqueues an abort that the run loop applies between
+  steps (``engine.abort`` frees blocks and prefix refs; the stream gets a
+  ``finish`` event with the abort reason).  A consumer that abandons
+  ``submit_stream`` mid-flight cancels its request automatically — a dead
+  SSE socket stops burning decode slots.
+* ``shutdown(timeout)`` is graceful drain: admission stops (new submissions
+  raise ``ServiceUnavailable`` → HTTP 503), active requests finish within
+  the hard timeout, then the loop stops.  ``launch.serve --http`` wires
+  SIGTERM/SIGINT to it.
+
+``engine`` may be a single ``InferenceEngine`` or a ``serving.router
+.Router`` fleet — both expose the same ``submit`` / ``step`` / ``abort`` /
+``has_work`` / hook surface, so always-on multi-replica serving is the
+same loop.
 """
 
 from __future__ import annotations
@@ -41,6 +58,7 @@ from dataclasses import dataclass
 from typing import AsyncIterator, Optional
 
 from repro.serving.engine import InferenceEngine, Request
+from repro.serving.faults import ServiceUnavailable
 
 
 @dataclass(frozen=True)
@@ -50,9 +68,12 @@ class StreamEvent:
     ``kind="token"``: ``tokens`` holds the newly emitted token ids and
     ``index`` the position of ``tokens[0]`` in the request's generated
     sequence (speculative decoding emits several tokens per event).
-    ``kind="finish"``: ``reason`` is ``"eos"``/``"length"``/``"error"``,
-    ``n_tokens`` the final generated length, ``ttft_s`` the time to first
-    token and ``preemptions`` how often the request was evicted+resumed.
+    ``kind="finish"``: ``reason`` is the request's finish reason —
+    ``"eos"``/``"length"`` for normal completion, ``"cancelled"`` /
+    ``"deadline_exceeded"`` / ``"aborted"`` for aborts, ``"error"`` for a
+    failed loop; ``n_tokens`` the final generated length, ``ttft_s`` the
+    time to first token and ``preemptions`` how often the request was
+    evicted+resumed (failovers, under a router).
     """
 
     kind: str
@@ -70,12 +91,13 @@ class AsyncEngine:
 
     def __init__(self, engine: InferenceEngine):
         self.engine = engine
-        self._inbox: deque = deque()  # (future, prompt, submit kwargs)
+        self._inbox: deque = deque()  # tagged ops: ("submit", ...) / ("abort", ...)
         self._streams: dict[int, asyncio.Queue] = {}
         self._wake = asyncio.Event()
         self._idle = asyncio.Event()
         self._task: Optional[asyncio.Task] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._draining = False
         engine.on_token = self._on_token
         engine.on_finish = self._on_finish
 
@@ -100,7 +122,7 @@ class AsyncEngine:
         ev = StreamEvent(
             kind="finish",
             req_id=req.req_id,
-            reason="eos" if eos else "length",
+            reason=req.finish_reason or ("eos" if eos else "length"),
             n_tokens=len(req.generated),
             ttft_s=req.ttft,
             preemptions=req.preemptions,
@@ -139,6 +161,35 @@ class AsyncEngine:
         is empty (the async analogue of ``run_until_drained``)."""
         await self._idle.wait()
 
+    async def shutdown(self, timeout: Optional[float] = None) -> bool:
+        """Graceful shutdown: stop admission (subsequent submissions raise
+        ``ServiceUnavailable``), wait for active requests to finish — at
+        most ``timeout`` seconds — then stop the loop.  Returns True when
+        the drain completed, False when the hard timeout cut it short
+        (remaining streams are failed with an ``"error"`` finish)."""
+        self._draining = True
+        drained = True
+        if self._task is not None and not self._task.done():
+            try:
+                await asyncio.wait_for(self.drain(), timeout)
+            except asyncio.TimeoutError:
+                drained = False
+        await self.stop()
+        return drained
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def cancel(self, req_id: int, reason: str = "cancelled") -> None:
+        """Abort a request from any thread/coroutine: the run loop applies
+        ``engine.abort`` between steps (blocks + prefix refs released, the
+        stream receives a ``finish`` event with ``reason``).  Unknown or
+        already-finished ids are a no-op."""
+        self._inbox.append(("abort", req_id, reason))
+        self._idle.clear()
+        self._wake.set()
+
     def _fail_streams(self, reason: str) -> None:
         for req_id, q in list(self._streams.items()):
             q.put_nowait(StreamEvent(kind="finish", req_id=req_id, reason=reason))
@@ -151,7 +202,12 @@ class AsyncEngine:
                 # drain submissions on the loop thread; no step is in
                 # flight here, so engine.submit is safe
                 while self._inbox:
-                    fut, prompt, kw = self._inbox.popleft()
+                    op = self._inbox.popleft()
+                    if op[0] == "abort":
+                        _, req_id, reason = op
+                        eng.abort(req_id, reason)
+                        continue
+                    _, fut, prompt, kw = op
                     if fut.cancelled():
                         continue
                     try:
@@ -193,11 +249,18 @@ class AsyncEngine:
         """Submit a request and stream its events until it finishes.
 
         Yields ``StreamEvent``s; the last one has ``kind="finish"``.
-        Validation errors from ``engine.submit`` raise here."""
+        Validation errors from ``engine.submit`` raise here; while the
+        service drains (``shutdown``) submissions raise
+        ``ServiceUnavailable``.  Abandoning the generator before the finish
+        event cancels the underlying request (its blocks free instead of
+        generating for a consumer that left)."""
+        if self._draining:
+            raise ServiceUnavailable("service is draining; not accepting requests")
         self.start()
         fut = asyncio.get_running_loop().create_future()
         self._inbox.append(
             (
+                "submit",
                 fut,
                 list(prompt),
                 dict(
@@ -213,14 +276,18 @@ class AsyncEngine:
         self._idle.clear()
         self._wake.set()
         req, q = await fut
+        finished = False
         try:
             while True:
                 ev = await q.get()
                 yield ev
                 if ev.kind == "finish":
+                    finished = True
                     return
         finally:
             self._streams.pop(req.req_id, None)
+            if not finished:
+                self.cancel(req.req_id)
 
     async def generate(self, prompt: list[int], **kw) -> tuple[StreamEvent, list[int]]:
         """Await a whole request: returns (finish event, generated tokens)."""

@@ -247,6 +247,7 @@ class InferenceEngine:
         self._c_energy = M.counter("engine_energy_joules_total", "IT-side joules charged to serving steps")
         self._c_preempted = M.counter("engine_preemptions_total", "scheduler evictions of running requests")
         self._c_deadline_miss = M.counter("engine_deadline_violations_total", "finished requests whose TTFT missed deadline_s")
+        self._c_aborted = M.counter("engine_requests_aborted_total", "requests aborted (client cancel, deadline, migration)")
         self._h_queue_wait = M.histogram("engine_queue_wait_seconds", "submit to admission")
         self._h_ttft = M.histogram("engine_ttft_seconds", "submit to first generated token")
         self._h_admit_first = M.histogram("engine_admit_to_first_token_seconds", "admission to first generated token")
@@ -431,6 +432,7 @@ class InferenceEngine:
         self.done: list[Request] = []
         self._preempted_ids: set[int] = set()  # distinct requests ever evicted
         self.deadline_violations = 0  # finished with ttft > deadline_s
+        self.aborts = 0  # requests aborted (cancel / deadline / migration)
         # streaming hooks (serving.async_engine): called synchronously on the
         # stepping thread — on_token(req, new_tokens) per emission batch,
         # on_finish(req) when a request completes
@@ -665,6 +667,99 @@ class InferenceEngine:
             generated=len(req.generated),
             priority=req.priority,
         )
+
+    # ------------------------------------------------------------------
+    def find_request(self, req_id: int) -> Optional[Request]:
+        """A live (waiting or active) request by id, or None."""
+        for r in self.queue:
+            if r.req_id == req_id:
+                return r
+        for r in self.slots:
+            if r is not None and r.req_id == req_id:
+                return r
+        return None
+
+    def abort(self, req, reason: str = "aborted") -> bool:
+        """Abort a queued, prefilling or decoding request.
+
+        Every resource the request holds is released: its slot and draft
+        state clear, its tail blocks free eagerly, and the committed span
+        routes through the prefix index (indexed blocks park in the LRU
+        cached pool, still matchable — an aborted request's prefix work is
+        not thrown away).  The request finishes with
+        ``finish_reason=reason`` and ``on_finish`` fires so streams
+        unblock.  Accepts a ``Request`` or a request id; returns False when
+        the request is unknown or already finished (abort/finish races are
+        benign).
+        """
+        if isinstance(req, int):
+            req = self.find_request(req)
+        if req is None or req.state == RequestState.DONE:
+            return False
+        slot = req.slot
+        if req.state == RequestState.WAITING:
+            if not self.scheduler.dequeue(req):
+                return False
+        else:  # ACTIVE: mid-prefill or decoding, holds a slot
+            self.scheduler.drop_prefilling(req)
+            if self.cache_kind == "paged":
+                written = int(req.prefill_pos if req.prefilling else self.pos[slot])
+                kept, tail = truncate_blocks(req.blocks, written, self.block_size)
+                if tail:
+                    self.allocator.free(tail)
+                self._release_blocks(kept[req.freed_blocks :])
+                req.blocks = []
+                req.freed_blocks = 0
+                self.tbl[slot] = 0  # null block
+                self._tbl_dirty = True
+                self.cache = clear_block_row(self.cfg, self.cache, slot)
+            else:
+                self.cache = clear_slot(self.cfg, self.cache, slot)
+            self.pos[slot] = 0
+            self.slots[slot] = None
+            req.prefilling = False
+            req.slot = None
+            if self._draft is not None:
+                self._draft.reset(slot)
+        req.state = RequestState.DONE
+        req.finish_reason = reason
+        req.done_t = self._clock()
+        self.aborts += 1
+        self._c_aborted.inc()
+        if reason == "deadline_exceeded":
+            self.deadline_violations += 1
+            self._c_deadline_miss.inc()
+        self.tracer.instant(
+            "abort",
+            track=SCHEDULER_TRACK if slot is None else slot_track(slot),
+            req_id=req.req_id,
+            reason=reason,
+            generated=len(req.generated),
+        )
+        self._g_queue.set(len(self.queue))
+        self.done.append(req)
+        if self.on_finish is not None:
+            self.on_finish(req)
+        return True
+
+    def _enforce_deadlines(self) -> None:
+        """Abort requests whose TTFT deadline passed with no first token.
+
+        ``deadline_s`` is a time-to-first-token SLO: a request that missed
+        it is worthless to its (interactive) caller, so burning pool blocks
+        and batch slots to finish it anyway only delays everyone else.
+        Runs at the top of every ``step()``; requests that got their first
+        token in time run to completion (a post-first-token overrun still
+        counts into ``deadline_violations`` at finish, but never aborts).
+        """
+        now = self._clock()
+        at_risk = [
+            r
+            for r in list(self.queue) + [s for s in self.slots if s is not None]
+            if r.first_token_t is None and now > r.deadline_t
+        ]
+        for r in at_risk:
+            self.abort(r, reason="deadline_exceeded")
 
     # ------------------------------------------------------------------
     def _bucket_len(self, n: int) -> int:
@@ -1078,6 +1173,9 @@ class InferenceEngine:
             return
         if len(req.generated) >= req.max_new_tokens or (req.generated and req.generated[-1] == self.eos):
             req.state = RequestState.DONE
+            req.finish_reason = (
+                "eos" if req.generated and req.generated[-1] == self.eos else "length"
+            )
             req.done_t = self._clock()
             slot = req.slot
             self._c_finished.inc()
@@ -1090,7 +1188,7 @@ class InferenceEngine:
                 "finish",
                 track=slot_track(slot),
                 req_id=req.req_id,
-                reason="eos" if req.generated and req.generated[-1] == self.eos else "length",
+                reason=req.finish_reason,
                 tokens=len(req.generated),
             )
             if req.admit_t is not None:
@@ -1187,6 +1285,7 @@ class InferenceEngine:
         done0 = len(self.done)
         if self._profile:
             self._phase_acc = {}
+        self._enforce_deadlines()
         self.scheduler.schedule()
         self.peak_active = max(self.peak_active, sum(r is not None for r in self.slots))
         active = [r for r in self.slots if r is not None and not r.prefilling]
@@ -1343,6 +1442,7 @@ class InferenceEngine:
             "preemptions": self.scheduler.preemptions,
             "requests_preempted": len(self._preempted_ids),
             "deadline_violations": self.deadline_violations,
+            "requests_aborted": self.aborts,
             "requests_done": len(self.done),
             "requests_queued": len(self.queue),
             "requests_active": sum(r is not None and not r.prefilling for r in self.slots),

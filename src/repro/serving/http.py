@@ -13,9 +13,24 @@ dependency, one process.  Endpoints:
   ``event: done`` frame with the finish summary; the connection closes
   after ``done`` (``Connection: close`` — no chunked framing needed).
   With ``"stream": false`` the full completion returns as one JSON object.
-* ``GET /metrics`` — the registry in Prometheus text exposition format.
+* ``GET /metrics`` — the registry in Prometheus text exposition format;
+  under a multi-replica router, each replica engine's registry renders too,
+  prefixed ``replica<N>_``.
 * ``GET /stats`` — ``engine.stats()`` as JSON.
-* ``GET /healthz`` — liveness probe.
+* ``GET /healthz`` — readiness probe: 200 while the service can accept
+  work, 503 while draining or with no admittable replica; the body reports
+  per-replica lifecycle states under a router.
+
+Hardening (the paper's front-ends face real browsers):
+
+* Malformed framing, bad ``Content-Length``, oversized headers/bodies and
+  non-JSON payloads all return a structured ``{"error": ...}`` 400 — a
+  client can never crash the acceptor with a reader exception.
+* A client that disconnects mid-stream aborts its request: the SSE loop's
+  failed write closes the stream generator, whose teardown cancels the
+  engine request and frees its blocks — no generating into a dead socket.
+* Submissions during shutdown / degraded mode (``ServiceUnavailable``)
+  return 503.
 
 Request knob validation happens in ``engine.submit`` (negative
 ``max_new_tokens``/``priority``, non-positive ``deadline_s``, empty or
@@ -31,9 +46,11 @@ from __future__ import annotations
 
 import asyncio
 import json
-from typing import Optional
+import signal
+from typing import Callable, Optional
 
 from repro.serving.async_engine import AsyncEngine
+from repro.serving.faults import ServiceUnavailable
 
 MAX_HEADER_BYTES = 16384
 MAX_BODY_BYTES = 4 * 1024 * 1024
@@ -45,6 +62,7 @@ _STATUS = {
     405: "Method Not Allowed",
     413: "Payload Too Large",
     500: "Internal Server Error",
+    503: "Service Unavailable",
 }
 
 
@@ -82,9 +100,14 @@ async def _read_request(reader: asyncio.StreamReader):
         if ":" in ln:
             k, v = ln.split(":", 1)
             headers[k.strip().lower()] = v.strip()
-    n = int(headers.get("content-length", 0))
+    try:
+        n = int(headers.get("content-length", 0))
+    except (TypeError, ValueError):
+        raise ValueError("invalid Content-Length") from None
+    if n < 0:
+        raise ValueError("invalid Content-Length")
     if n > MAX_BODY_BYTES:
-        raise ValueError("body too large")
+        raise ValueError(f"body too large ({n} > {MAX_BODY_BYTES} bytes)")
     body = await reader.readexactly(n) if n else b""
     return method, path, headers, body
 
@@ -119,6 +142,17 @@ class HttpFrontend:
         async with self._server:
             await self._server.serve_forever()
 
+    async def shutdown(self, timeout: Optional[float] = None) -> bool:
+        """Graceful shutdown: close the acceptor (no new connections),
+        drain the engine (in-flight requests finish; new submissions on
+        already-open connections get 503), then stop the stepping loop.
+        Returns True when the drain beat the hard ``timeout``."""
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        return await self.async_engine.shutdown(timeout)
+
     # -- request handling ----------------------------------------------
     async def _handle(self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter) -> None:
         try:
@@ -131,13 +165,19 @@ class HttpFrontend:
                 return
             method, path, _, body = parsed
             if path == "/healthz":
-                await _respond_json(writer, 200, {"ok": True})
+                await self._healthz(writer)
             elif path == "/metrics":
                 if method != "GET":
                     await _respond_json(writer, 405, {"error": "GET only"})
                     return
-                text = self.async_engine.engine.metrics.render_text().encode()
-                writer.write(_head(200, "text/plain; version=0.0.4", length=len(text)) + text)
+                eng = self.async_engine.engine
+                text = eng.metrics.render_text()
+                # router fleet: append every replica engine's registry with
+                # a replica<N>_ name prefix (one scrape, no collisions)
+                for rep in getattr(eng, "replicas", ()):
+                    text += rep.engine.metrics.render_text(prefix=f"replica{rep.id}_")
+                data = text.encode()
+                writer.write(_head(200, "text/plain; version=0.0.4", length=len(data)) + data)
                 await writer.drain()
             elif path == "/stats":
                 await _respond_json(writer, 200, self.async_engine.engine.stats())
@@ -156,6 +196,21 @@ class HttpFrontend:
                 await writer.wait_closed()
             except ConnectionError:
                 pass
+
+    async def _healthz(self, writer: asyncio.StreamWriter) -> None:
+        """Readiness: 200 while the service can accept a request, 503 while
+        draining or with every replica out of rotation.  Under a router the
+        body carries per-replica lifecycle states."""
+        eng = self.async_engine.engine
+        draining = self.async_engine.draining
+        replicas = getattr(eng, "replicas", None)
+        if replicas is None:
+            body = {"ok": not draining, "draining": draining}
+        else:
+            states = {str(r.id): r.state.value for r in replicas}
+            ok = not draining and any(r.admittable for r in replicas)
+            body = {"ok": ok, "draining": draining, "replicas": states}
+        await _respond_json(writer, 200 if body["ok"] else 503, body)
 
     async def _generate(self, writer: asyncio.StreamWriter, body: bytes) -> None:
         try:
@@ -183,6 +238,9 @@ class HttpFrontend:
         if not stream:
             try:
                 final, toks = await self.async_engine.generate(prompt, **kw)
+            except ServiceUnavailable as e:  # draining / degraded fleet
+                await _respond_json(writer, 503, {"error": str(e)})
+                return
             except ValueError as e:  # submit() validation
                 await _respond_json(writer, 400, {"error": str(e)})
                 return
@@ -201,46 +259,96 @@ class HttpFrontend:
 
         gen = self.async_engine.submit_stream(prompt, **kw)
         try:
-            first = await gen.__anext__()
-        except ValueError as e:  # submit() validation
-            await _respond_json(writer, 400, {"error": str(e)})
-            return
-        # headers go out only once submission succeeded; each event frame is
-        # drained immediately so tokens reach the client as they are emitted
-        writer.write(_head(200, "text/event-stream"))
-        await writer.drain()
-        ev = first
-        while True:
-            if ev.kind == "token":
-                writer.write(
-                    _sse_frame("token", {"req_id": ev.req_id, "tokens": list(ev.tokens), "index": ev.index})
-                )
-            else:
-                writer.write(
-                    _sse_frame(
-                        "done",
-                        {
-                            "req_id": ev.req_id,
-                            "reason": ev.reason,
-                            "n_tokens": ev.n_tokens,
-                            "ttft_s": ev.ttft_s,
-                            "preemptions": ev.preemptions,
-                        },
-                    )
-                )
+            try:
+                first = await gen.__anext__()
+            except ServiceUnavailable as e:  # draining / degraded fleet
+                await _respond_json(writer, 503, {"error": str(e)})
+                return
+            except ValueError as e:  # submit() validation
+                await _respond_json(writer, 400, {"error": str(e)})
+                return
+            # headers go out only once submission succeeded; each event frame
+            # is drained immediately so tokens reach the client as emitted
+            writer.write(_head(200, "text/event-stream"))
             await writer.drain()
-            if ev.kind == "finish":
-                break
-            ev = await gen.__anext__()
+            ev = first
+            while True:
+                if ev.kind == "token":
+                    writer.write(
+                        _sse_frame("token", {"req_id": ev.req_id, "tokens": list(ev.tokens), "index": ev.index})
+                    )
+                else:
+                    writer.write(
+                        _sse_frame(
+                            "done",
+                            {
+                                "req_id": ev.req_id,
+                                "reason": ev.reason,
+                                "n_tokens": ev.n_tokens,
+                                "ttft_s": ev.ttft_s,
+                                "preemptions": ev.preemptions,
+                            },
+                        )
+                    )
+                await writer.drain()
+                if ev.kind == "finish":
+                    break
+                ev = await gen.__anext__()
+        finally:
+            # closing the generator before its finish event cancels the
+            # engine request (submit_stream's teardown) — a client that
+            # disconnected mid-stream stops consuming slots and blocks
+            await gen.aclose()
 
 
-async def serve_http(engine, host: str = "127.0.0.1", port: int = 8080) -> None:
-    """Blocking entry: wrap ``engine`` in an AsyncEngine + HttpFrontend and
-    serve until cancelled (``launch.serve --http``)."""
+async def serve_http(
+    engine,
+    host: str = "127.0.0.1",
+    port: int = 8080,
+    *,
+    metrics_json: Optional[str] = None,
+    trace_out: Optional[str] = None,
+    drain_timeout_s: float = 10.0,
+    shutdown_event: Optional[asyncio.Event] = None,
+    on_ready: Optional[Callable[["HttpFrontend"], None]] = None,
+) -> None:
+    """Blocking entry: wrap ``engine`` (an ``InferenceEngine`` or a
+    ``Router`` fleet) in an AsyncEngine + HttpFrontend and serve until
+    SIGTERM/SIGINT or ``shutdown_event``.
+
+    Shutdown is graceful: admission stops (503), active requests get up to
+    ``drain_timeout_s`` to finish, then ``metrics_json`` / ``trace_out``
+    flush — a kill doesn't lose the observability record.  ``on_ready``
+    fires with the frontend once the port is bound (tests use it with
+    ``port=0``).
+    """
     front = HttpFrontend(AsyncEngine(engine), host=host, port=port)
     await front.start()
     print(f"[serve] http/sse listening on http://{front.host}:{front.port}", flush=True)
+    stop = shutdown_event if shutdown_event is not None else asyncio.Event()
+    loop = asyncio.get_running_loop()
+    installed = []
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            loop.add_signal_handler(sig, stop.set)
+            installed.append(sig)
+        except (NotImplementedError, RuntimeError, ValueError):
+            pass  # non-unix loop or non-main thread: event-only shutdown
+    if on_ready is not None:
+        on_ready(front)
     try:
-        await front.serve_forever()
+        await stop.wait()
+        print("[serve] shutdown requested; draining", flush=True)
+        drained = await front.shutdown(drain_timeout_s)
+        print(f"[serve] drain {'complete' if drained else 'timed out'}", flush=True)
     finally:
+        for sig in installed:
+            loop.remove_signal_handler(sig)
         await front.stop()
+        eng = front.async_engine.engine
+        if metrics_json:
+            eng.metrics.write_json(metrics_json)
+            print(f"[serve] metrics snapshot -> {metrics_json}", flush=True)
+        if trace_out:
+            eng.tracer.write(trace_out)
+            print(f"[serve] chrome trace -> {trace_out}", flush=True)

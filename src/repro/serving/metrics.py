@@ -268,14 +268,22 @@ class MetricsRegistry:
             return {p: None for p in pcts}
         return {p: h.percentile(p) for p in pcts}
 
-    def render_text(self) -> str:
-        """Prometheus text exposition (scrape-ready)."""
+    def render_text(self, prefix: str = "") -> str:
+        """Prometheus text exposition (scrape-ready).
+
+        ``prefix`` prepends every metric name — the multi-replica router
+        renders each replica engine's registry as ``replica<N>_...`` so one
+        ``/metrics`` scrape carries the whole fleet without name collisions.
+        """
         lines = []
         for name, m in self._metrics.items():
+            pname = prefix + name
             if m.help:
-                lines.append(f"# HELP {name} {m.help}")
-            lines.append(f"# TYPE {name} {m.kind}")
-            lines.extend(m.render())
+                lines.append(f"# HELP {pname} {m.help}")
+            lines.append(f"# TYPE {pname} {m.kind}")
+            lines.extend(
+                prefix + ln if prefix else ln for ln in m.render()
+            )
         return "\n".join(lines) + ("\n" if lines else "")
 
     def snapshot(self) -> dict:

@@ -49,6 +49,19 @@ def chain_hash(parent: int, tokens: tuple[int, ...]) -> int:
     return hash((parent, tokens))
 
 
+def routing_key(prompt: list[int], block_size: int) -> int:
+    """Coarse affinity key for a prompt: the chain hash of its first block
+    (short prompts hash whatever they have).
+
+    Two prompts share cached blocks only if their chains agree from the
+    root, and the chain's first link is exactly this value — so a router
+    that keeps requests with equal keys on one replica keeps every
+    same-system-prompt burst where its blocks are, even before the first
+    request of the burst has prefilled anything the index could ``match``.
+    """
+    return chain_hash(_ROOT, tuple(prompt[: min(block_size, len(prompt))]))
+
+
 class PartialHit(NamedTuple):
     block: int  # cached physical block to copy-on-write from
     tokens: int  # leading tokens of that block shared with the prompt
@@ -132,6 +145,12 @@ class PrefixIndex:
                 if n > best:
                     best, partial = n, PartialHit(cand, n)
         return blocks, partial
+
+    def match_tokens(self, prompt: list[int]) -> int:
+        """Tokens of ``prompt`` a ``match`` would serve from cache — a pure
+        peek (no references taken), used by the router to score replicas."""
+        full, partial = self.match(prompt)
+        return len(full) * self.block_size + (partial.tokens if partial else 0)
 
     # -- reference management -------------------------------------------
     def acquire(self, blocks: list[int]) -> None:

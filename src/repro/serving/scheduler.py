@@ -88,6 +88,9 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0  # 0 = full softmax (only applies when temperature > 0)
     state: RequestState = RequestState.WAITING
+    # how the request ended: "eos" / "length", or an abort cause
+    # ("aborted", "cancelled", "deadline_exceeded", "migrated", ...)
+    finish_reason: Optional[str] = None
     generated: list[int] = field(default_factory=list)
     slot: Optional[int] = None
     blocks: list[int] = field(default_factory=list)  # paged: owned physical blocks
@@ -196,6 +199,14 @@ class SchedulerCore:
         """Insert at the request's policy position (binary search — the
         queue is kept sorted, never re-sorted per admission pass)."""
         insort(self.queue, req, key=self._key)
+
+    def dequeue(self, req: Request) -> bool:
+        """Remove a waiting request from the queue (abort path).  Returns
+        False when it is not queued (already admitted or finished)."""
+        if req in self.queue:
+            self.queue.remove(req)
+            return True
+        return False
 
     def drop_prefilling(self, req: Request) -> None:
         """Forget a mid-prefill request (preempted before its first token)."""

@@ -45,6 +45,11 @@ def slot_track(slot: int) -> int:
     return slot + 1
 
 
+def replica_track(replica_id: int) -> int:
+    """Track id for a replica on a router tracer (track 0 is the router)."""
+    return replica_id + 1
+
+
 @dataclass
 class TraceEvent:
     name: str
@@ -56,11 +61,20 @@ class TraceEvent:
 
 
 class Tracer:
-    def __init__(self, clock: Callable[[], float] = time.monotonic, capacity: int = 4096):
+    def __init__(
+        self,
+        clock: Callable[[], float] = time.monotonic,
+        capacity: int = 4096,
+        track_label: Optional[Callable[[int], str]] = None,
+    ):
         if capacity < 1:
             raise ValueError(f"capacity={capacity}")
         self._clock = clock
         self.capacity = capacity
+        # maps a track id to its viewer lane name; default: engine layout
+        # (track 0 = scheduler, track N = slot N-1).  The router passes its
+        # own labeler (track 0 = router, track N = replica N-1).
+        self.track_label = track_label
         self._events: deque[TraceEvent] = deque(maxlen=capacity)
         self.recorded = 0  # total events ever recorded (>= len(events))
 
@@ -129,7 +143,10 @@ class Tracer:
              "args": {"name": "paged-engine"}},
         ]
         for t in sorted({e.track for e in evs} | {SCHEDULER_TRACK}):
-            label = "scheduler" if t == SCHEDULER_TRACK else f"slot {t - 1}"
+            if self.track_label is not None:
+                label = self.track_label(t)
+            else:
+                label = "scheduler" if t == SCHEDULER_TRACK else f"slot {t - 1}"
             out.append(
                 {"ph": "M", "pid": 0, "tid": t, "ts": 0, "name": "thread_name",
                  "args": {"name": label}}

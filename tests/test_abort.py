@@ -1,0 +1,215 @@
+"""Abort/cancel paths: resource release, deadline enforcement, async cancel.
+
+``engine.abort`` must be callable at every point of a request's life —
+queued, mid-chunked-prefill, decoding — and afterwards the engine must hold
+*zero* residue: the slot clears, tail blocks free, committed blocks route
+through the prefix index (parked in the evictable cached pool, so
+``num_free`` still equals ``capacity``), and surviving requests produce
+exactly the tokens they would have without the abort.
+
+Deadline enforcement rides the same path: ``deadline_s`` is a TTFT SLO, so
+a request whose deadline passes with no first token aborts with
+``finish_reason="deadline_exceeded"`` (it is worthless to its interactive
+caller), while one that got its first token in time always runs to
+completion — an overrun then only counts into ``deadline_violations``.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config.model import reduce_for_smoke
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import AsyncEngine, InferenceEngine, ManualClock, RequestState
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def make_engine(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("cache_kind", "paged")
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefill_budget", 8)
+    return InferenceEngine(cfg, params, **kw)
+
+
+def assert_no_residue(eng):
+    """After a drain every resource must be back: blocks (cached blocks are
+    evictable, so they count as free), slots and queue."""
+    assert eng.allocator.num_free == eng.allocator.capacity
+    assert all(s is None for s in eng.slots)
+    assert not eng.queue
+
+
+# ---- abort at each lifecycle stage, under both policies -------------------
+
+
+@pytest.mark.parametrize("policy", ["slo", "fcfs"])
+def test_abort_queued_request(setup, policy):
+    cfg, params = setup
+    eng = make_engine(cfg, params, max_batch=1, policy=policy)
+    runner = eng.submit([5, 9, 12, 7], max_new_tokens=4)
+    queued = eng.submit([21, 22, 23], max_new_tokens=4)
+    assert queued.state is RequestState.WAITING
+    assert eng.abort(queued, "cancelled")
+    assert queued.state is RequestState.DONE
+    assert queued.finish_reason == "cancelled" and queued.generated == []
+    eng.run_until_drained()
+    assert runner.state is RequestState.DONE and len(runner.generated) == 4
+    s = eng.stats()
+    assert s["requests_aborted"] == 1 and s["requests_done"] == 2
+    assert_no_residue(eng)
+
+
+@pytest.mark.parametrize("policy", ["slo", "fcfs"])
+def test_abort_mid_prefill_releases_blocks(setup, policy):
+    """Abort while the victim is inside chunked prefill: its partial blocks
+    must free and the survivor must be token-identical to an undisturbed
+    run."""
+    cfg, params = setup
+    survivor_prompt = [4, 4, 8, 6]
+    ref = make_engine(cfg, params, policy=policy)
+    ref_req = ref.submit(survivor_prompt, max_new_tokens=5)
+    ref.run_until_drained()
+
+    eng = make_engine(cfg, params, prefill_budget=4, policy=policy)
+    victim = eng.submit(list(range(2, 26)), max_new_tokens=4)  # 24-token prompt
+    survivor = eng.submit(survivor_prompt, max_new_tokens=5)
+    eng.step()
+    assert victim.prefilling, "victim must still be mid-chunked-prefill"
+    held = eng.allocator.blocks_in_use
+    assert eng.abort(victim.req_id, "cancelled")  # by id, not handle
+    assert eng.allocator.blocks_in_use < held
+    assert victim.finish_reason == "cancelled"
+    eng.run_until_drained()
+    assert survivor.generated == ref_req.generated
+    assert_no_residue(eng)
+
+
+@pytest.mark.parametrize("prefix_cache", [True, False])
+def test_abort_mid_decode_parks_committed_blocks(setup, prefix_cache):
+    """Abort a decoding request: with the prefix cache on, its committed
+    blocks park in the index (a follower still hits them); off, everything
+    frees outright.  Either way the pool returns to full capacity."""
+    cfg, params = setup
+    eng = make_engine(cfg, params, prefix_cache=prefix_cache)
+    prompt = [7, 3, 20, 21, 22, 23, 24, 25]
+    req = eng.submit(prompt, max_new_tokens=8)
+    for _ in range(4):
+        eng.step()
+    assert req.state is RequestState.ACTIVE and len(req.generated) >= 2
+    assert eng.abort(req, "cancelled")
+    assert_no_residue(eng)
+    assert not eng.has_work
+    follower = eng.submit(prompt + [30], max_new_tokens=3)
+    eng.run_until_drained()
+    if prefix_cache:
+        assert follower.prefix_hit_tokens >= eng.block_size, (
+            "an abort must not throw away indexed prefix work"
+        )
+    assert_no_residue(eng)
+    names = [e.name for e in eng.tracer.events_for(req.req_id)]
+    assert "abort" in names
+
+
+def test_abort_unknown_or_finished_is_noop(setup):
+    cfg, params = setup
+    eng = make_engine(cfg, params)
+    req = eng.submit([5, 9, 12], max_new_tokens=2)
+    eng.run_until_drained()
+    assert not eng.abort(req), "finished request: abort must report False"
+    assert not eng.abort(9999), "unknown id: abort must report False"
+    assert eng.stats()["requests_aborted"] == 0
+
+
+# ---- deadline enforcement -------------------------------------------------
+
+
+def test_deadline_aborts_before_first_token(setup):
+    """A request whose TTFT deadline passes while still queued must abort
+    with deadline_exceeded — not burn blocks finishing a worthless answer."""
+    cfg, params = setup
+    clock = ManualClock(tick=0.05)
+    eng = make_engine(cfg, params, clock=clock)
+    doomed = eng.submit([1, 2, 3], max_new_tokens=4, deadline_s=0.001)
+    healthy = eng.submit([5, 9, 12], max_new_tokens=4)
+    eng.run_until_drained()
+    assert doomed.state is RequestState.DONE
+    assert doomed.finish_reason == "deadline_exceeded" and doomed.generated == []
+    assert healthy.finish_reason == "length" and len(healthy.generated) == 4
+    s = eng.stats()
+    assert s["deadline_violations"] == 1 and s["requests_aborted"] == 1
+    assert "engine_deadline_violations_total 1" in eng.metrics.render_text()
+    assert_no_residue(eng)
+
+
+def test_deadline_never_aborts_after_first_token(setup):
+    """Post-first-token the SLO is already met or missed; the request runs
+    to completion either way (an overrun only counts, never aborts)."""
+    cfg, params = setup
+    clock = ManualClock(tick=0.01)
+    eng = make_engine(cfg, params, clock=clock)
+    req = eng.submit([5, 9, 12, 7], max_new_tokens=6, deadline_s=1e9)
+    while not req.generated:
+        eng.step()
+    # shrink the deadline under the current clock: deadline_t is now firmly
+    # in the past, but the first token already landed inside it
+    req.deadline_s = clock.now - req.submit_t
+    assert clock.now > req.deadline_t or clock.now == req.deadline_t
+    eng.run_until_drained()
+    assert req.finish_reason in ("length", "eos") and len(req.generated) >= 1
+    assert eng.stats()["requests_aborted"] == 0
+
+
+# ---- async cancel / stream abandonment ------------------------------------
+
+
+def test_async_cancel_mid_stream(setup):
+    """cancel() between steps must abort the request, free its resources
+    and deliver a finish event with the cancel reason to the stream."""
+    cfg, params = setup
+    eng = make_engine(cfg, params)
+
+    async def go():
+        async with AsyncEngine(eng) as aeng:
+            events = []
+            async for ev in aeng.submit_stream([5, 9, 12, 7], max_new_tokens=32):
+                events.append(ev)
+                if ev.kind == "token" and len(events) == 2:
+                    aeng.cancel(ev.req_id)
+            return events
+
+    events = asyncio.run(go())
+    finish = events[-1]
+    assert finish.kind == "finish" and finish.reason == "cancelled"
+    assert 0 < finish.n_tokens < 32, "cancel must land mid-generation"
+    assert eng.stats()["requests_aborted"] == 1
+    assert_no_residue(eng)
+
+
+def test_abandoned_stream_cancels_request(setup):
+    """A consumer that walks away mid-stream (dead SSE socket) must not
+    keep its request decoding: generator teardown cancels it."""
+    cfg, params = setup
+    eng = make_engine(cfg, params)
+
+    async def go():
+        async with AsyncEngine(eng) as aeng:
+            async for ev in aeng.submit_stream([7, 3, 20], max_new_tokens=32):
+                if ev.kind == "token":
+                    break  # client disconnected
+            await aeng.drain()
+
+    asyncio.run(go())
+    assert eng.stats()["requests_aborted"] == 1
+    assert not eng.has_work
+    assert_no_residue(eng)

@@ -209,14 +209,19 @@ def test_fcfs_never_preempts(setup):
     assert lo.done_t <= hi.done_t, "fcfs runs strictly in arrival order"
 
 
-def test_deadline_violation_counted(setup):
+def test_deadline_violation_aborts_pre_first_token(setup):
+    """An unservable TTFT deadline now *aborts* the request (finish_reason
+    "deadline_exceeded") instead of letting it finish late — finishing a
+    missed interactive request only delays everyone else."""
     cfg, params = setup
     clock = ManualClock(tick=0.05)  # every clock read advances 50ms
     eng = ample_engine(cfg, params, clock=clock)
-    eng.submit([1, 2, 3], max_new_tokens=2, deadline_s=0.001)
+    req = eng.submit([1, 2, 3], max_new_tokens=2, deadline_s=0.001)
     eng.run_until_drained()
+    assert req.finish_reason == "deadline_exceeded" and req.generated == []
     assert eng.deadline_violations == 1
-    assert eng.stats()["deadline_violations"] == 1
+    s = eng.stats()
+    assert s["deadline_violations"] == 1 and s["requests_aborted"] == 1
 
 
 # ---- async engine ---------------------------------------------------------
@@ -343,3 +348,175 @@ def test_http_sse_roundtrip(setup):
     assert frames[-1][1]["reason"] == "length"
     assert "engine_tokens_out_total" in metrics
     assert "400" in bad.split("\r\n")[0]
+
+
+# ---- HTTP hardening / lifecycle -------------------------------------------
+
+
+async def _http_get(port: int, path: str) -> str:
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: t\r\n\r\n".encode())
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    await writer.wait_closed()
+    return raw.decode()
+
+
+def test_http_rejects_malformed_framing(setup):
+    """A hostile client must get a structured 400, never crash the
+    acceptor: bad Content-Length, oversized declared body, non-JSON body,
+    non-object JSON body."""
+    cfg, params = setup
+
+    async def go():
+        front = HttpFrontend(AsyncEngine(ample_engine(cfg, params)), port=0)
+        await front.start()
+        results = {}
+        try:
+            for name, req in {
+                "bad_length": b"POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: nope\r\n\r\n",
+                "huge_body": b"POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: 999999999\r\n\r\n",
+                "not_json": b"POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: 4\r\n\r\nabcd",
+                "not_object": b"POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: 7\r\n\r\n[1,2,3]",
+                "bad_prompt": b'POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: 21\r\n\r\n{"prompt": "strings"}',
+            }.items():
+                reader, writer = await asyncio.open_connection("127.0.0.1", front.port)
+                writer.write(req)
+                await writer.drain()
+                results[name] = (await reader.read()).decode()
+                writer.close()
+                await writer.wait_closed()
+            # the acceptor survived all of it and still serves health
+            results["healthz"] = await _http_get(front.port, "/healthz")
+        finally:
+            await front.stop()
+        return results
+
+    results = asyncio.run(go())
+    for name in ("bad_length", "huge_body", "not_json", "not_object", "bad_prompt"):
+        assert "400" in results[name].split("\r\n")[0], (name, results[name])
+    assert "200" in results["healthz"].split("\r\n")[0]
+
+
+def test_http_client_disconnect_aborts_request(setup):
+    """A client that opens a stream and drops the socket mid-generation
+    must not keep decoding into the void: the SSE write path tears the
+    stream generator down, which cancels the engine request."""
+    cfg, params = setup
+    eng = ample_engine(cfg, params)
+
+    async def go():
+        aeng = AsyncEngine(eng)
+        front = HttpFrontend(aeng, port=0)
+        await front.start()
+        try:
+            reader, writer = await asyncio.open_connection("127.0.0.1", front.port)
+            body = json.dumps({"prompt": [5, 9, 12, 7], "max_new_tokens": 48}).encode()
+            writer.write(
+                b"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                + f"Content-Length: {len(body)}\r\n\r\n".encode()
+                + body
+            )
+            await writer.drain()
+            await reader.readuntil(b"event: token")  # first token is out
+            writer.close()  # client vanishes mid-stream
+            await writer.wait_closed()
+            await aeng.drain()
+        finally:
+            await front.stop()
+
+    asyncio.run(go())
+    s = eng.stats()
+    assert s["requests_aborted"] == 1, "disconnected client's request must abort"
+    assert s["requests_active"] == 0 and s["requests_prefilling"] == 0
+    assert eng.allocator.num_free == eng.allocator.capacity
+
+
+def test_healthz_reports_draining_and_replicas(setup):
+    """/healthz is the readiness probe: 200 while accepting, 503 + reason
+    while draining; under a router it carries per-replica states."""
+    cfg, params = setup
+
+    async def go():
+        aeng = AsyncEngine(ample_engine(cfg, params))
+        front = HttpFrontend(aeng, port=0)
+        await front.start()
+        try:
+            ready = await _http_get(front.port, "/healthz")
+            aeng._draining = True  # what shutdown() flips first
+            draining = await _http_get(front.port, "/healthz")
+        finally:
+            await front.stop()
+        return ready, draining
+
+    ready, draining = asyncio.run(go())
+    assert "200" in ready.split("\r\n")[0]
+    assert json.loads(ready.partition("\r\n\r\n")[2])["ok"] is True
+    assert "503" in draining.split("\r\n")[0]
+    body = json.loads(draining.partition("\r\n\r\n")[2])
+    assert body == {"ok": False, "draining": True}
+
+
+def test_submission_during_drain_gets_503(setup):
+    cfg, params = setup
+
+    async def go():
+        aeng = AsyncEngine(ample_engine(cfg, params))
+        front = HttpFrontend(aeng, port=0)
+        await front.start()
+        port = front.port
+        try:
+            aeng._draining = True
+            return await _http_roundtrip(port, {"prompt": [5, 9], "max_new_tokens": 2})
+        finally:
+            await front.stop()
+
+    raw = asyncio.run(go())
+    assert "503" in raw.split("\r\n")[0]
+    assert "draining" in json.loads(raw.partition("\r\n\r\n")[2])["error"]
+
+
+def test_serve_http_sigterm_drains_and_flushes(setup, tmp_path):
+    """The full production shutdown path: serve_http installs a SIGTERM
+    handler; the signal triggers a graceful drain (in-flight requests
+    finish) and the metrics/trace artifacts flush before exit."""
+    import os
+    import signal as _signal
+
+    from repro.serving.http import serve_http
+
+    cfg, params = setup
+    metrics_path = tmp_path / "metrics.json"
+    trace_path = tmp_path / "trace.json"
+    eng = ample_engine(cfg, params)
+
+    async def go():
+        ready = asyncio.Queue()
+
+        async def client():
+            front = await ready.get()
+            raw = await _http_roundtrip(
+                front.port, {"prompt": [5, 9, 12, 7], "max_new_tokens": 6}
+            )
+            os.kill(os.getpid(), _signal.SIGTERM)
+            return raw
+
+        server = serve_http(
+            eng,
+            port=0,
+            metrics_json=str(metrics_path),
+            trace_out=str(trace_path),
+            drain_timeout_s=30.0,
+            on_ready=ready.put_nowait,
+        )
+        _, raw = await asyncio.wait_for(asyncio.gather(server, client()), timeout=60)
+        return raw
+
+    raw = asyncio.run(go())
+    frames = _parse_sse(raw)
+    assert frames[-1][0] == "done" and frames[-1][1]["reason"] == "length"
+    snap = json.loads(metrics_path.read_text())
+    assert snap["counters"]["engine_tokens_out_total"]["value"] >= 6
+    trace = json.loads(trace_path.read_text())
+    assert any(e.get("name") == "finish" for e in trace["traceEvents"])

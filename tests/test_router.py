@@ -1,0 +1,388 @@
+"""Multi-replica router: affinity, health, failover, drain, degraded mode.
+
+The contract under test:
+
+* **Routing** — prefix affinity sends a request to the replica already
+  holding its prompt's blocks; a cold burst sharing a new prefix pins to
+  one replica via the sticky key; distinct prompts balance by load.
+* **Failover correctness** — killing a replica mid-decode must lose no
+  request: in-flight work resubmits to a peer, resumes from the committed
+  tokens, and the final greedy output is *token-identical* to a run with
+  no failure (the preemption-resume contract, across engines).
+* **Health lifecycle** — missed heartbeats walk HEALTHY → SUSPECT →
+  UNHEALTHY exactly like the seed cluster's sweep; a straggler recovers,
+  a hung replica fails over.
+* **Drain / degraded mode** — a draining replica finishes (or migrates)
+  its work and retires; with no admittable replica ``submit`` raises
+  ``ServiceUnavailable`` and fully-orphaned work fails fast.
+"""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config.model import reduce_for_smoke
+from repro.configs import get_config
+from repro.serving import (
+    AsyncEngine,
+    FaultPlan,
+    InferenceEngine,
+    ManualClock,
+    Replica,
+    ReplicaState,
+    Router,
+    ServiceUnavailable,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    params = init_params_cached(cfg)
+    return cfg, params
+
+
+_PARAMS_CACHE = {}
+
+
+def init_params_cached(cfg):
+    if "p" not in _PARAMS_CACHE:
+        from repro.models import init_params
+
+        _PARAMS_CACHE["p"] = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return _PARAMS_CACHE["p"]
+
+
+def make_engine(cfg, params, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("cache_kind", "paged")
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefix_cache", True)
+    kw.setdefault("prefill_budget", 8)
+    return InferenceEngine(cfg, params, **kw)
+
+
+def make_router(cfg, params, n, *, clock=None, fault_plans=None, engine_kw=None, **router_kw):
+    replicas = [
+        Replica(
+            i,
+            make_engine(cfg, params, clock=clock, **(engine_kw or {})),
+            clock=clock,
+            fault_plan=(fault_plans or {}).get(i),
+        )
+        for i in range(n)
+    ]
+    router_kw.setdefault("backoff_base_s", 1e-4)
+    return Router(replicas, clock=clock, **router_kw)
+
+
+# prompts stay well under the smoke config's vocab (256): an out-of-vocab
+# id reads garbage embeddings and poisons the greedy argmax
+def family(t, n=8):
+    return [(13 * t + 5 * j + 7) % 197 + 2 for j in range(n)]
+
+
+# ---- FaultPlan unit behaviour ---------------------------------------------
+
+
+def test_fault_plan_schedule():
+    plan = FaultPlan(crash_at_step=3, hang_from_step=10, slow_from_step=5, slow_until_step=8)
+    assert not plan.crashes_at(2) and plan.crashes_at(3) and plan.crashes_at(7)
+    assert not plan.hangs_at(9) and plan.hangs_at(10)
+    assert not plan.slow_at(4) and plan.slow_at(5) and plan.slow_at(7)
+    assert not plan.slow_at(8), "slow window is half-open"
+    assert not plan.benign
+    assert FaultPlan().benign
+    assert FaultPlan(slow_from_step=0, slow_until_step=None).slow_at(10 ** 6)
+    with pytest.raises(ValueError):
+        FaultPlan(slow_every=0)
+
+
+def test_router_validation(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        Router([])
+    eng = make_engine(cfg, params)
+    with pytest.raises(ValueError):
+        Router([Replica(0, eng), Replica(0, eng)])
+    with pytest.raises(ValueError):
+        Router([Replica(0, eng)], policy="sticky-bit")
+    with pytest.raises(ValueError):
+        Router([Replica(0, eng)], suspect_after=2.0, fail_after=1.0)
+    with pytest.raises(ValueError):
+        Router([Replica(0, eng)], max_retries=-1)
+    with pytest.raises(ValueError):
+        Replica(-1, eng)
+
+
+# ---- routing --------------------------------------------------------------
+
+
+def test_affinity_routes_to_warm_replica(setup):
+    """After one request drains, a prefix-sharing follower must land on the
+    replica whose PrefixIndex holds the blocks — even when that replica is
+    more loaded than its cold peer."""
+    cfg, params = setup
+    router = make_router(cfg, params, 2)
+    first = router.submit(family(0) + [31, 32], max_new_tokens=4)
+    router.run_until_drained()
+    warm = first.replica_id
+    # tilt the load away from the warm replica: affinity must still win
+    cold = router.replicas[1 - warm]
+    cold_req = cold.engine.submit([9, 8, 7], max_new_tokens=2)
+    follower = router.submit(family(0) + [41, 42], max_new_tokens=4)
+    assert follower.replica_id == warm
+    assert router.metrics.counter("router_affinity_routed_total").value >= 1
+    router.run_until_drained()
+    assert follower.generated and follower.state == "done"
+    assert cold_req.state.name == "DONE"
+
+
+def test_sticky_key_pins_cold_burst(setup):
+    """A burst sharing a brand-new prefix arrives before anything is cached;
+    the sticky routing key must pin the whole burst to one replica so the
+    first prefill serves the rest."""
+    cfg, params = setup
+    router = make_router(cfg, params, 2)
+    burst = [router.submit(family(3) + [60 + i], max_new_tokens=3) for i in range(3)]
+    assert len({r.replica_id for r in burst}) == 1
+    # distinct prompts balance away from the pinned replica by load
+    other = router.submit(family(4), max_new_tokens=3)
+    assert other.replica_id != burst[0].replica_id
+    router.run_until_drained()
+    assert all(r.state == "done" for r in burst)
+
+
+def test_distinct_prompts_balance_by_load(setup):
+    cfg, params = setup
+    router = make_router(cfg, params, 2)
+    reqs = [router.submit(family(t), max_new_tokens=3) for t in range(4)]
+    assert {r.replica_id for r in reqs} == {0, 1}
+    router.run_until_drained()
+    s = router.stats()
+    assert s["requests_done"] == 4 and s["requests_failed"] == 0
+    assert s["failovers"] == 0
+
+
+def test_round_robin_and_random_policies(setup):
+    cfg, params = setup
+    rr = make_router(cfg, params, 2, policy="round_robin")
+    a = rr.submit(family(0), max_new_tokens=2)
+    b = rr.submit(family(0), max_new_tokens=2)  # same prefix, still alternates
+    assert {a.replica_id, b.replica_id} == {0, 1}
+    rnd = make_router(cfg, params, 2, policy="random")
+    reqs = [rnd.submit(family(t), max_new_tokens=2) for t in range(8)]
+    assert all(r.replica_id in (0, 1) for r in reqs)
+
+
+# ---- failover correctness -------------------------------------------------
+
+
+def test_crash_failover_is_token_identical(setup):
+    """Kill one of two replicas mid-decode: every request must finish via
+    failover with greedy output identical to a no-failure run."""
+    cfg, params = setup
+    prompts = [family(t) + [50 + t] for t in range(4)]
+    ref = make_engine(cfg, params, max_batch=8)
+    ref_reqs = [ref.submit(p, max_new_tokens=8) for p in prompts]
+    ref.run_until_drained()
+
+    clock = ManualClock(tick=1e-4)
+    router = make_router(
+        cfg, params, 2, clock=clock, fault_plans={0: FaultPlan(crash_at_step=4)}
+    )
+    reqs = [router.submit(p, max_new_tokens=8) for p in prompts]
+    on_zero = [r for r in reqs if r.replica_id == 0]
+    assert on_zero, "load balancing must place work on the doomed replica"
+    router.run_until_drained()
+
+    assert router.replicas[0].state is ReplicaState.DEAD
+    s = router.stats()
+    assert s["requests_done"] == 4 and s["requests_failed"] == 0
+    assert s["failovers"] >= len(on_zero) and s["retries"] >= len(on_zero)
+    for got, want in zip(reqs, ref_reqs):
+        assert got.generated == want.generated, "failover changed greedy output"
+    moved = on_zero[0]
+    assert moved.failovers >= 1 and moved.preemptions == moved.failovers
+    assert moved.replica_id == 1
+    names = [e.name for e in router.tracer.events]
+    assert "replica_down" in names and "failover" in names
+    assert "router_failovers_total" in router.metrics.render_text()
+
+
+def test_hang_detected_by_heartbeat_sweep(setup):
+    """A wedged replica (no work, no heartbeat) must walk SUSPECT →
+    UNHEALTHY through the sweep and its in-flight work must fail over."""
+    cfg, params = setup
+    clock = ManualClock(tick=0.01)
+    router = make_router(
+        cfg,
+        params,
+        2,
+        clock=clock,
+        suspect_after=0.05,
+        fail_after=0.4,
+        fault_plans={0: FaultPlan(hang_from_step=1)},
+    )
+    req = router.submit(family(1), max_new_tokens=6)
+    assert req.replica_id == 0  # first placement: lowest id on a load tie
+    router.run_until_drained()
+    assert router.replicas[0].state is ReplicaState.UNHEALTHY
+    assert req.state == "done" and req.replica_id == 1
+    assert req.failovers >= 1
+    names = [e.name for e in router.tracer.events]
+    assert "replica_suspect" in names and "replica_down" in names
+
+    ref = make_engine(cfg, params)
+    ref_req = ref.submit(family(1), max_new_tokens=6)
+    ref.run_until_drained()
+    assert req.generated == ref_req.generated
+
+
+def test_slow_replica_suspects_then_recovers(setup):
+    """A stale heartbeat marks a replica SUSPECT (routed around, still
+    admittable as a last resort); a fresh heartbeat restores HEALTHY."""
+    cfg, params = setup
+    clock = ManualClock()
+    router = make_router(cfg, params, 2, clock=clock, suspect_after=1.0, fail_after=50.0)
+    straggler = router.replicas[0]
+    straggler.last_heartbeat = -2.0  # age 2.0 > suspect_after at now=0
+    router._sweep_health(clock.now)
+    assert straggler.state is ReplicaState.SUSPECT
+    assert straggler.admittable, "suspect beats a 503"
+    req = router.submit(family(2), max_new_tokens=2)
+    assert req.replica_id == 1, "healthy peer preferred over the suspect"
+    straggler.last_heartbeat = clock.now  # straggler caught up
+    router._sweep_health(clock.now)
+    assert straggler.state is ReplicaState.HEALTHY
+    names = [e.name for e in router.tracer.events]
+    assert "replica_suspect" in names and "replica_recovered" in names
+
+
+def test_retry_exhaustion_fails_the_request(setup):
+    """With every replica eventually dead, orphaned work must fail fast
+    (finish_reason="unavailable") instead of hanging in the retry queue."""
+    cfg, params = setup
+    clock = ManualClock(tick=1e-4)
+    router = make_router(
+        cfg,
+        params,
+        2,
+        clock=clock,
+        fault_plans={0: FaultPlan(crash_at_step=2), 1: FaultPlan(crash_at_step=2)},
+    )
+    reqs = [router.submit(family(t), max_new_tokens=8) for t in range(2)]
+    done = router.run_until_drained()
+    assert all(r.state is ReplicaState.DEAD for r in router.replicas)
+    assert all(r.state == "failed" for r in reqs)
+    assert {r.finish_reason for r in reqs} <= {"failed", "unavailable"}
+    assert len(done) == 2 and not router.has_work
+    assert router.stats()["requests_failed"] == 2
+
+
+def test_degraded_mode_rejects_submissions(setup):
+    cfg, params = setup
+    router = make_router(cfg, params, 1)
+    router.replicas[0].state = ReplicaState.UNHEALTHY
+    with pytest.raises(ServiceUnavailable):
+        router.submit(family(0), max_new_tokens=2)
+    assert router.metrics.counter("router_unavailable_total").value == 1
+    assert router.stats()["replicas_admittable"] == 0
+
+
+def test_abort_reaches_parked_failover(setup):
+    """A request orphaned by a crash and parked behind backoff must still
+    be abortable — the client that cancels during an outage gets a finish
+    event, not a zombie retry."""
+    cfg, params = setup
+    clock = ManualClock()  # no ticks: backoff gate never expires on its own
+    router = make_router(
+        cfg, params, 2, clock=clock, backoff_base_s=1e9,
+        fault_plans={0: FaultPlan(crash_at_step=1)},
+    )
+    req = router.submit(family(5), max_new_tokens=8)
+    assert req.replica_id == 0
+    router.step()  # replica step 0: normal work
+    router.step()  # replica step 1: crash fires; the orphan parks
+
+    assert req.engine_req is None and req.state == "active"
+    assert router.abort(req, "cancelled")
+    assert req.state == "done" and req.finish_reason == "cancelled"
+    assert not router.abort(req), "double abort is a no-op"
+    router.run_until_drained()
+    assert router.stats()["requests_inflight"] == 0
+
+
+# ---- drain ----------------------------------------------------------------
+
+
+def test_drain_finishes_work_then_retires(setup):
+    cfg, params = setup
+    router = make_router(cfg, params, 2)
+    req = router.submit(family(0), max_new_tokens=6)
+    assert req.replica_id == 0
+    router.step()
+    router.drain(0)
+    late = router.submit(family(0) + [70], max_new_tokens=2)
+    assert late.replica_id == 1, "draining replica must not admit, even on affinity"
+    router.run_until_drained()
+    router.step()  # one idle step retires the drained-clean replica
+    assert req.state == "done" and req.replica_id == 0, "drain lets work finish in place"
+    assert router.replicas[0].state is ReplicaState.RETIRED
+    with pytest.raises(ValueError):
+        router.drain(0)  # retired: nothing to drain
+    names = [e.name for e in router.tracer.events]
+    assert "drain" in names and "drain_complete" in names
+
+
+def test_drain_migrate_moves_work_token_identically(setup):
+    cfg, params = setup
+    ref = make_engine(cfg, params)
+    ref_req = ref.submit(family(6), max_new_tokens=8)
+    ref.run_until_drained()
+
+    clock = ManualClock(tick=1e-4)
+    router = make_router(cfg, params, 2, clock=clock)
+    req = router.submit(family(6), max_new_tokens=8)
+    assert req.replica_id == 0
+    for _ in range(3):
+        router.step()
+    assert req.generated, "migration must happen mid-decode to test resume"
+    router.drain(0, migrate=True)
+    router.run_until_drained()
+    router.step()
+    assert req.state == "done" and req.replica_id == 1
+    assert req.generated == ref_req.generated, "migration changed greedy output"
+    assert router.stats()["migrations"] == 1
+    assert router.stats()["failovers"] == 0, "migration is not failure accounting"
+    assert router.replicas[0].state is ReplicaState.RETIRED
+    alloc = router.replicas[0].engine.allocator
+    assert alloc.num_free == alloc.capacity, "migrated-off replica must hold no blocks"
+
+
+# ---- the async loop serves a fleet unchanged ------------------------------
+
+
+def test_async_engine_drives_router_fleet(setup):
+    """AsyncEngine duck-types the router exactly as one engine: streams
+    over a 2-replica fleet must match the single-engine reference."""
+    cfg, params = setup
+    prompts = [family(0) + [80], family(1) + [81]]
+    ref = make_engine(cfg, params)
+    ref_reqs = [ref.submit(p, max_new_tokens=5) for p in prompts]
+    ref.run_until_drained()
+
+    async def go():
+        async with AsyncEngine(make_router(cfg, params, 2)) as aeng:
+            outs = await asyncio.gather(
+                *(aeng.generate(p, max_new_tokens=5) for p in prompts)
+            )
+            return outs
+
+    outs = asyncio.run(go())
+    for (final, toks), want in zip(outs, ref_reqs):
+        assert toks == want.generated
+        assert final.reason == "length"
