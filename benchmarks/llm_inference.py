@@ -52,6 +52,17 @@ harness serves a reduced model through the continuous-batching engine:
   requests that cannot make their TTFT deadline are aborted
   (``deadline_exceeded``) instead of served late; the SLO arm aborts none.
 
+* **tiered KV cache** (``--spill``) — drop-on-evict vs host-RAM spill on a
+  deliberately over-committed block pool: 8 tenants, each with a distinct
+  3-block system prompt, return for a second round after their chains have
+  been evicted.  The drop arm re-prefills the full prompt; the spill arm
+  admits against the host tier and swaps the blocks back at a per-block
+  restore cost (cheaper than recomputing the block's tokens, charged on the
+  same virtual clock).  The spill arm must show a **strictly higher prefix
+  hit rate and lower mean TTFT** with greedy output token-identical to the
+  drop arm (asserted here and by the CI ``tiered-kv`` job from
+  ``benchmarks/results/llm_inference_spill.json``).
+
 * **multi-replica router** (``--router``) — N independent engines behind
   the prefix-affinity ``serving.router.Router``, driven closed-loop on
   virtual time where a fleet round costs the *slowest* replica's step
@@ -429,6 +440,120 @@ def run_openloop() -> list[dict]:
     return rows
 
 
+# ---- tiered KV cache: drop-on-evict vs host-RAM spill ----------------------
+SPILL_GROUPS = 8
+SPILL_ROUNDS = 2
+SPILL_MAX_NEW = 8
+SPILL_NUM_BLOCKS = 12  # 11 usable: ~1.5 requests' working set, constant eviction
+SPILL_BYTES = 64 << 20
+# restoring one spilled block (H2D copy of block_size rows) is cheaper than
+# recomputing its 16 tokens (16 * TOKEN_COST_S = 16 ms) but not free
+RESTORE_COST_S = 0.004
+
+
+def _spill_prompts() -> list[list[int]]:
+    """SPILL_GROUPS tenants, each with a distinct 48-token system prompt
+    (3 full blocks) plus a 4-token unique tail — together they need ~3x the
+    pool, so every chain is evicted before its tenant returns."""
+    prompts = []
+    for g in range(SPILL_GROUPS):
+        system = [(11 * g + 3 * j + 5) % 193 + 2 for j in range(SYSTEM_PROMPT_LEN)]
+        prompts.append(system + [198 + g * UNIQUE_TAIL + k for k in range(UNIQUE_TAIL)])
+    return prompts
+
+
+def _drive_spill(eng, clock: ManualClock) -> tuple[dict, list]:
+    """Sequential submit+drain per request on virtual time, SPILL_ROUNDS
+    passes over the tenant mix: round 2 finds round 1's chains evicted —
+    re-prefilled (drop tier) or swapped back from host RAM (spill tier).
+    Step cost = dispatch overhead + per-token compute + per-block restore."""
+    toks, ttfts = [], []
+    for _ in range(SPILL_ROUNDS):
+        for p in _spill_prompts():
+            r = eng.submit(list(p), max_new_tokens=SPILL_MAX_NEW)
+            while eng.has_work:
+                clock.advance(STEP_OVERHEAD_S)
+                fed0 = eng.prefill_tokens + eng.verify_tokens
+                restored0 = eng.restores
+                produced = eng.step()
+                fed = eng.prefill_tokens + eng.verify_tokens - fed0
+                clock.advance(
+                    TOKEN_COST_S * (produced + fed)
+                    + RESTORE_COST_S * (eng.restores - restored0)
+                )
+            toks.append(list(r.generated))
+            ttfts.append(r.ttft)
+    s = eng.stats()
+    s["mean_ttft_s"] = float(np.mean(ttfts))
+    return s, toks
+
+
+def run_spill() -> list[dict]:
+    """Tiered-KV A/B: drop-on-evict vs host-RAM spill on an over-committed
+    pool.  Same engine shape, same tenant mix, same virtual cost model; the
+    spill arm must win hit rate and mean TTFT with token-identical output."""
+    cfg = reduce_for_smoke(get_config("mistral-nemo-12b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    arms, toks = {}, {}
+    for label, spill_bytes in (("drop", 0), ("spill", SPILL_BYTES)):
+        clock = ManualClock()
+        eng = InferenceEngine(
+            cfg,
+            params,
+            max_batch=2,
+            max_seq=MAX_SEQ,
+            cache_kind="paged",
+            block_size=BLOCK_SIZE,
+            num_blocks=SPILL_NUM_BLOCKS,
+            prefix_cache=True,
+            prefill_budget=16,
+            spill_bytes=spill_bytes,
+            clock=clock,
+        )
+        arms[label], toks[label] = _drive_spill(eng, clock)
+    drop, spill = arms["drop"], arms["spill"]
+    assert toks["spill"] == toks["drop"], "spill tier changed greedy outputs"
+    assert drop["alloc_evictions_dropped"] > 0, "pool never overflowed; no A/B"
+    assert spill["alloc_evictions_spilled"] > 0 and spill["restores"] > 0
+    assert spill["prefix_hit_rate"] > drop["prefix_hit_rate"], (
+        f"spill tier must lift the hit rate on the returning-tenant mix: "
+        f"{spill['prefix_hit_rate']:.2f} vs {drop['prefix_hit_rate']:.2f}"
+    )
+    assert spill["mean_ttft_s"] < drop["mean_ttft_s"], (
+        f"restoring from host RAM must beat re-prefill on mean TTFT: "
+        f"{spill['mean_ttft_s']:.3f}s vs {drop['mean_ttft_s']:.3f}s"
+    )
+    assert spill["prefill_tokens"] < drop["prefill_tokens"]
+    rows = []
+    for label in ("drop", "spill"):
+        s = arms[label]
+        rows.append(
+            {
+                "name": f"llm_inference_tiered_{label}_cpu",
+                "us_per_call": s["mean_ttft_s"] * 1e6,
+                "mean_ttft_s": s["mean_ttft_s"],
+                "prefill_tokens": s["prefill_tokens"],
+                "prefix_hit_rate": s.get("prefix_hit_rate", 0.0),
+                "evictions_dropped": s["alloc_evictions_dropped"],
+                "evictions_spilled": s["alloc_evictions_spilled"],
+                "spills": s.get("spill_spills", 0),
+                "restores": s.get("restores", 0),
+                "spill_drops": s.get("spill_drops", 0),
+                "spill_hit_tokens": s.get("spill_hit_tokens", 0),
+                "tokens_match": toks[label] == toks["drop"],
+                "derived": (
+                    f"mean_ttft_ms={s['mean_ttft_s'] * 1e3:.1f} "
+                    f"hit_rate={s.get('prefix_hit_rate', 0.0):.2f} "
+                    f"prefill_tokens={s['prefill_tokens']} "
+                    f"restores={s.get('restores', 0)}"
+                ),
+            }
+        )
+    RESULTS_DIR.mkdir(exist_ok=True)
+    (RESULTS_DIR / "llm_inference_spill.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
 # ---- multi-replica router: affinity, scaling, failover --------------------
 ROUTER_TENANTS = 8
 ROUTER_PER_TENANT = 2
@@ -656,8 +781,15 @@ def main() -> None:
         help="run the multi-replica router A/B (scaling, affinity-vs-random "
         "prefix hit rate, mid-run replica kill with failover) on virtual time",
     )
+    ap.add_argument(
+        "--spill", action="store_true",
+        help="run the tiered-KV A/B (drop-on-evict vs host-RAM spill on an "
+        "over-committed pool) on virtual time",
+    )
     args = ap.parse_args()
-    if args.router:
+    if args.spill:
+        rows = run_spill()
+    elif args.router:
         rows = run_router()
     elif args.openloop:
         rows = run_openloop()

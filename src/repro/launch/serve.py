@@ -16,7 +16,11 @@ system prompt to every request so the prefix cache's hit rate / saved
 prefill tokens show up in the stats; ``--prefill-budget`` bounds prompt
 tokens processed per engine step (chunked prefill interleaved with decode).
 ``--cache dense`` selects the slot-granular baseline; ``--quantize-kv``
-stores paged pools int8 (KIVI scales); ``--attn-impl pallas`` routes decode
+stores paged pools int8 (KIVI scales); ``--spill-bytes N`` adds the tiered
+KV cache — evicted prefix blocks spill to an N-byte host-RAM pool
+(``--spill-dtype cache|int8|fp8`` picks the at-rest encoding) and swap back
+on a prefix hit at ``--restore-budget`` blocks per step; ``--attn-impl
+pallas`` routes decode
 and prefill chunks through the paged-attention kernels; ``--spec-decode
 ngram|draft`` turns on speculative decoding with ``--spec-k`` drafted tokens
 per verify pass; ``--tp N`` shards params and the paged K/V pools over a
@@ -96,6 +100,21 @@ def main() -> None:
     ap.add_argument(
         "--prefill-budget", type=int, default=0,
         help="max prompt tokens prefilled per step (0 = unbounded)",
+    )
+    ap.add_argument(
+        "--spill-bytes", type=int, default=0,
+        help="host-RAM budget for the spill tier: evicted prefix blocks park "
+        "in pinned host memory instead of being dropped (0 = drop on evict)",
+    )
+    ap.add_argument(
+        "--spill-dtype", default="cache", choices=("cache", "int8", "fp8"),
+        help="at-rest encoding for spilled blocks: 'cache' stores pool-native "
+        "rows (bit-exact), 'int8'/'fp8' compress on the way out",
+    )
+    ap.add_argument(
+        "--restore-budget", type=int, default=4,
+        help="max spilled blocks swapped back per scheduler step (bounds "
+        "host->device traffic interleaved with decode)",
     )
     ap.add_argument(
         "--spec-decode", default="off", choices=("off", "ngram", "draft"),
@@ -191,6 +210,9 @@ def main() -> None:
             attn_impl=args.attn_impl,
             prefix_cache=False if args.no_prefix_cache else None,
             prefill_budget=args.prefill_budget,
+            spill_bytes=args.spill_bytes,
+            spill_dtype=args.spill_dtype,
+            restore_budget=args.restore_budget,
             policy=args.policy,
             spec_decode=args.spec_decode,
             spec_k=args.spec_k,

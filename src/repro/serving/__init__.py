@@ -20,16 +20,19 @@ from repro.serving.kvcache import (
     clear_slot,
     copy_block_rows,
     decode_cache_from_prefill,
+    gather_block_rows,
     graft_prefill_into_blocks,
     make_engine_cache,
     make_table_row,
+    restore_block_rows,
     truncate_block_rows,
     write_request_into_slot,
 )
 from repro.serving.paged import BlockAllocator, OutOfBlocks, blocks_needed, truncate_blocks
-from repro.serving.prefix import PartialHit, PrefixIndex, chain_hash, routing_key
+from repro.serving.prefix import PartialHit, PrefixIndex, chain_hash, is_spilled, routing_key
 from repro.serving.sampler import sample_token, sample_tokens, spec_accept
 from repro.serving.spec_decode import DraftModel, make_draft_config, ngram_draft
+from repro.serving.spill import SPILL_MODES, SpillPool
 
 __all__ = [
     "InferenceEngine",
@@ -63,13 +66,18 @@ __all__ = [
     "DraftModel",
     "make_draft_config",
     "ngram_draft",
+    "SPILL_MODES",
+    "SpillPool",
+    "is_spilled",
     "clear_block_row",
     "clear_slot",
     "copy_block_rows",
     "decode_cache_from_prefill",
+    "gather_block_rows",
     "graft_prefill_into_blocks",
     "make_engine_cache",
     "make_table_row",
+    "restore_block_rows",
     "truncate_block_rows",
     "write_request_into_slot",
     "sample_token",

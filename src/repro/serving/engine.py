@@ -35,6 +35,18 @@ Two cache layouts:
 * ``cache_kind="dense"`` — the original slot-granular ring-buffer cache
   (still used by ssm/vlm families, and as the A/B baseline in benchmarks).
 
+**Tiered KV cache** (``spill_bytes=``, ``spill_dtype=``): the paged pool is
+backed by a host-RAM spill tier (``serving.spill.SpillPool``).  An LRU
+eviction of a prefix-indexed block demotes its K/V rows to host memory
+(optionally int8/fp8-compressed at rest) instead of destroying them; the
+index entry stays matchable under a spill handle, and a later prefix hit
+admits as a cheap *re-prefill*: fresh device blocks are allocated, the
+entry promotes onto them, and the row swap-ins run through the scheduler's
+per-step ``restore_budget`` — double-buffered against decode, never
+blocking admission.  Greedy outputs are token-identical to both the
+drop-on-evict baseline and the dense-cache oracle
+(``tests/test_tiered_kv.py``).
+
 Hybrid (attention+SSM) archs page their K/V but their recurrent states
 absorb the whole prompt in one pass, so they keep the blocking
 prefill+graft admission (no prefix sharing / chunking); dense/moe take the
@@ -106,6 +118,7 @@ from __future__ import annotations
 import itertools
 import time
 import warnings
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
@@ -127,15 +140,18 @@ from repro.serving.kvcache import (
     clear_slot,
     copy_block_rows,
     decode_cache_from_prefill,
+    gather_block_rows,
     graft_prefill_into_blocks,
     make_engine_cache,
     make_table_row,
+    restore_block_rows,
     truncate_block_rows,
     write_request_into_slot,
 )
 from repro.serving.metrics import EnergyBridge, MetricsRegistry
 from repro.serving.paged import BlockAllocator, blocks_needed, truncate_blocks
-from repro.serving.prefix import PrefixIndex
+from repro.serving.prefix import PrefixIndex, is_spilled
+from repro.serving.spill import SPILL_MODES, SpillPool, warn_if_fp8_over_int8
 from repro.serving.sampler import sample_token, sample_tokens, spec_accept
 from repro.serving.scheduler import (  # re-exported for back-compat
     Request,
@@ -159,6 +175,18 @@ BUCKETED_FAMILIES = ("dense", "moe", "vlm")
 MIN_PREFILL_BUCKET = 8
 
 
+@dataclass
+class _RestoreTask:
+    """One pending spill swap-in: ``payload`` rows destined for device block
+    ``dst``.  ``cow`` marks a partial-tail restore whose canonical entry
+    stays in the pool (cancel must not demote the private copy back)."""
+
+    dst: int
+    payload: dict
+    cow: bool
+    t0: float
+
+
 class InferenceEngine:
     def __init__(
         self,
@@ -179,6 +207,9 @@ class InferenceEngine:
         prefill_budget: int = 0,
         policy: str = "slo",
         defrag_threshold: float = 0.5,
+        spill_bytes: int = 0,
+        spill_dtype: str = "cache",
+        restore_budget: int = 4,
         spec_decode: str = "off",
         spec_k: int = 4,
         draft_cfg=None,
@@ -248,7 +279,11 @@ class InferenceEngine:
         self._c_preempted = M.counter("engine_preemptions_total", "scheduler evictions of running requests")
         self._c_deadline_miss = M.counter("engine_deadline_violations_total", "finished requests whose TTFT missed deadline_s")
         self._c_aborted = M.counter("engine_requests_aborted_total", "requests aborted (client cancel, deadline, migration)")
+        self._c_spill_hit = M.counter("engine_spill_hit_tokens_total", "prompt tokens served from the host spill tier")
+        self._c_restored = M.counter("engine_restores_total", "spilled blocks swapped back into device blocks")
+        self._c_restore_cancel = M.counter("engine_restores_cancelled_total", "queued swap-ins cancelled by preempt/abort")
         self._h_queue_wait = M.histogram("engine_queue_wait_seconds", "submit to admission")
+        self._h_restore_wait = M.histogram("engine_restore_wait_seconds", "swap-in queued to rows scattered on device")
         self._h_ttft = M.histogram("engine_ttft_seconds", "submit to first generated token")
         self._h_admit_first = M.histogram("engine_admit_to_first_token_seconds", "admission to first generated token")
         self._h_tpot = M.histogram("engine_tpot_seconds", "mean inter-token time per finished request")
@@ -328,7 +363,11 @@ class InferenceEngine:
         # decisions and the chunked-prefill budget live in the extracted
         # SchedulerCore; the engine provides the execution primitives
         # (try_admit / run_chunk / finish_prefill / preempt / ...) below
-        self.scheduler = SchedulerCore(self, policy=policy, prefill_budget=prefill_budget)
+        if restore_budget < 1:
+            raise ValueError(f"restore_budget={restore_budget} (need >= 1)")
+        self.scheduler = SchedulerCore(
+            self, policy=policy, prefill_budget=prefill_budget, restore_budget=restore_budget
+        )
         self.defrag_threshold = defrag_threshold
 
         # speculative decoding rides on the chunked verify path: the k drafted
@@ -397,10 +436,35 @@ class InferenceEngine:
             )
             inner_evict = self.allocator.on_evict
             def _evict_hook(block, _inner=inner_evict):
-                if _inner is not None:
-                    _inner(block)
-                self.tracer.instant("evict", track=SCHEDULER_TRACK, block=block)
+                # propagate the tier tag: the prefix index returns "spilled"
+                # when the block's content was demoted to the host pool, and
+                # the allocator accounts the two outcomes separately
+                tier = _inner(block) if _inner is not None else None
+                self.tracer.instant(
+                    "spill" if tier == "spilled" else "evict",
+                    track=SCHEDULER_TRACK,
+                    block=block,
+                )
+                return tier
             self.allocator.on_evict = _evict_hook
+            # host spill tier: evicted prefix blocks park in host RAM and
+            # swap back in on a later hit instead of re-prefilling
+            if spill_dtype not in SPILL_MODES:
+                raise ValueError(f"spill_dtype={spill_dtype!r} (choose from {SPILL_MODES})")
+            self.spill = None
+            if spill_bytes > 0:
+                if self.prefix is None:
+                    warnings.warn(
+                        f"spill_bytes needs the prefix cache (paged cache + "
+                        f"dense/moe family); disabled for {cfg.name}",
+                        RuntimeWarning,
+                        stacklevel=2,
+                    )
+                else:
+                    spill_dtype = warn_if_fp8_over_int8(self.quantize_kv, spill_dtype)
+                    self.spill = SpillPool(spill_bytes, mode=spill_dtype)
+                    self.prefix.attach_spill(self.spill, self._fetch_block_rows)
+                    self.spill.attach_metrics(self.metrics)
             self.tbl = np.zeros((max_batch, self.max_blocks_per_seq), np.int32)
             self._tbl_dirty = True
             self.cache = init_paged_cache(
@@ -415,6 +479,14 @@ class InferenceEngine:
         else:
             self.allocator = None
             self.prefix = None
+            self.spill = None
+            if spill_bytes > 0:
+                warnings.warn(
+                    f"spill_bytes only applies to paged caches; ignored for "
+                    f"cache_kind={cache_kind!r} ({cfg.name})",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
             self.cache = make_engine_cache(cfg, max_batch, max_seq, cache_dtype)
 
         if mesh is not None:
@@ -474,6 +546,11 @@ class InferenceEngine:
                 **lc_out,
             )
             self._copy_block = jax.jit(copy_block_rows, donate_argnums=(0,), **c_out)
+            # spill tier data movement: the gather is dispatched at evict
+            # time (the immutable result pins the rows while the pool block
+            # is reused); the scatter batches every task of one restore pass
+            self._gather_rows = jax.jit(gather_block_rows)
+            self._restore_rows = jax.jit(restore_block_rows, donate_argnums=(0,), **c_out)
         if self.spec_mode != "off":
             self._verify = jax.jit(
                 lambda p, c, t, s, row: verify_step(
@@ -503,6 +580,12 @@ class InferenceEngine:
         self.prefix_hit_tokens = 0  # prompt tokens served from cached blocks
         self.defrag_triggers = 0
         self._frees_seen = 0  # auto-defrag: only re-check after new frees
+        self.spill_hits = 0  # admissions that matched >= 1 spilled block
+        self.spill_hit_tokens = 0  # prompt tokens served from the host tier
+        self.restores = 0  # spilled blocks swapped back onto the device
+        self.restores_cancelled = 0  # queued swap-ins cancelled (preempt/abort)
+        self._restore_q: list[_RestoreTask] = []  # FIFO, drained per step
+        self._restoring: set[int] = set()  # dst blocks with a queued task
         self.spec_steps = 0  # verify dispatches
         self.spec_slot_steps = 0  # per-slot verify passes (spec stats denominator)
         self.spec_drafted = 0  # candidate tokens proposed (valid lanes only)
@@ -625,6 +708,11 @@ class InferenceEngine:
         resume.
         """
         slot = req.slot
+        # cancel in-flight spill swap-ins FIRST: cancelled entries demote
+        # back to the pool (re-keyed off the device blocks), so the
+        # register call below skips their chain positions and the release
+        # plain-frees the never-written destination blocks
+        self._cancel_restores(req)
         written = int(req.prefill_pos if req.prefilling else self.pos[slot])
         if self.prefix is not None and req.freed_blocks == 0:
             # index the committed context (prompt + generated) up to the
@@ -703,6 +791,7 @@ class InferenceEngine:
         else:  # ACTIVE: mid-prefill or decoding, holds a slot
             self.scheduler.drop_prefilling(req)
             if self.cache_kind == "paged":
+                self._cancel_restores(req)
                 written = int(req.prefill_pos if req.prefilling else self.pos[slot])
                 kept, tail = truncate_blocks(req.blocks, written, self.block_size)
                 if tail:
@@ -842,6 +931,90 @@ class InferenceEngine:
         else:
             self.allocator.free(blocks)
 
+    # ---- spill tier: gather / swap-in machinery ----------------------
+    def _fetch_block_rows(self, block: int) -> dict:
+        """One block's K/V rows off the device pool (the prefix index calls
+        this at evict time, before the allocator reuses the block).  The
+        jitted gather returns fresh immutable arrays, so the value stays
+        pinned in the ``SpillPool`` staging ring even after the pool block
+        is overwritten."""
+        return self._gather_rows(self.cache, jnp.asarray(block, jnp.int32))
+
+    def _queue_restore(self, dst: int, payload: dict, *, cow: bool, req: Request) -> None:
+        self._restore_q.append(_RestoreTask(dst, payload, cow, self._clock()))
+        self._restoring.add(dst)
+        req.pending_restores.add(dst)
+
+    def restoring(self, req: Request) -> bool:
+        """Scheduler gate: the request's block table points at rows the
+        restore pass has not scattered yet — no prefill chunk (or table
+        publish) may run until the swap-ins land."""
+        return bool(req.pending_restores)
+
+    def run_restores(self, budget: int) -> int:
+        """Execute up to ``budget`` queued swap-ins as ONE jitted scatter
+        (rows stacked along a new block axis), then unblock every admitted
+        request that was waiting on them.  Called by the scheduler between
+        admission and the prefill budget each step, so restores overlap
+        with the decode work of other slots instead of serializing admission."""
+        if budget <= 0 or not self._restore_q:
+            return 0
+        tasks = self._restore_q[:budget]
+        del self._restore_q[: len(tasks)]
+        t0 = self._clock()
+        rows = {
+            name: jnp.stack([jnp.asarray(t.payload[name]) for t in tasks], axis=1)
+            for name in tasks[0].payload
+        }
+        blocks = jnp.asarray([t.dst for t in tasks], jnp.int32)
+        self.cache = self._dispatch("restore", self._restore_rows, self.cache, blocks, rows)
+        now = self._clock()
+        done = {t.dst for t in tasks}
+        self._restoring -= done
+        for r in self.slots:
+            if r is not None and r.pending_restores:
+                r.pending_restores -= done
+        for t in tasks:
+            self._h_restore_wait.observe(max(now - t.t0, 0.0))
+        n = len(tasks)
+        self.restores += n
+        self._c_restored.inc(n)
+        if self.spill is not None:
+            self.spill.restores += n
+        self.tracer.span(
+            "restore", t0, track=SCHEDULER_TRACK, blocks=n, queued=len(self._restore_q)
+        )
+        return n
+
+    def _cancel_restores(self, req: Request) -> None:
+        """Drop the request's pending swap-ins (preempt/abort mid-restore).
+        A task another admitted request also waits on stays queued; an
+        exclusive full-block task is removed and its entry *demoted* back to
+        the spill pool — the destination block was never written, so the
+        rows only exist in the un-copied payload.  COW tasks just drop (the
+        canonical entry never left the pool)."""
+        if not req.pending_restores:
+            return
+        for b in sorted(req.pending_restores):
+            req.pending_restores.discard(b)
+            if any(
+                r is not None and r is not req and b in r.pending_restores
+                for r in self.slots
+            ):
+                continue
+            task = next((t for t in self._restore_q if t.dst == b), None)
+            if task is None:
+                continue  # already scattered this step
+            self._restore_q.remove(task)
+            self._restoring.discard(b)
+            self.restores_cancelled += 1
+            self._c_restore_cancel.inc()
+            if not task.cow and self.prefix is not None:
+                self.prefix.demote(b, task.payload)
+            self.tracer.instant(
+                "restore_cancel", track=SCHEDULER_TRACK, block=b, req_id=req.req_id
+            )
+
     def _admit_chunked(self, req: Request, slot: int) -> bool:
         """Prefix-matched, block-budgeted admission (no model call: context
         chunks run inside subsequent ``step()`` prefill budgets).  Returns
@@ -851,38 +1024,77 @@ class InferenceEngine:
         path with its committed context ``prompt + generated`` in place of
         the prompt: the blocks its eviction parked in the prefix LRU match
         here, so the preempted work is mostly recovered rather than
-        recomputed."""
+        recomputed.
+
+        Matched blocks may live on either tier: device entries pin by
+        refcount as before; **spilled** entries (negative handles) admit as
+        a cheap re-prefill — their payloads are popped from the host pool
+        *before* ``alloc`` (eviction churn inside alloc can spill new
+        entries and must never LRU-drop rows about to swap back in), the
+        entries are ``promote``d onto freshly-allocated device blocks, and
+        the actual row scatter is queued for the scheduler's budgeted
+        restore pass.  A spilled partial tail copies-on-write from the
+        pool's decompressed rows while the canonical entry stays put."""
         needed = blocks_needed(
             len(req.prompt) + req.max_new_tokens + self._spec_extra, self.block_size
         )
         ctx = req.context()
         full, partial = self.prefix.match(ctx) if self.prefix else ([], None)
-        need_new = needed - len(full)
+        dev_full = [b for b in full if not is_spilled(b)]
+        spilled = [b for b in full if is_spilled(b)]
+        partial_spilled = partial is not None and is_spilled(partial.block)
+        # spilled hits need a fresh device block each; device hits are shared
+        need_new = needed - len(dev_full)
         if self.prefix is not None:
-            # pin matched blocks first so the free-count check below can't
-            # hand them out as eviction victims
-            self.prefix.acquire(full)
-            if partial is not None:
+            # pin matched device blocks first so the free-count check below
+            # can't hand them out as eviction victims
+            self.prefix.acquire(dev_full)
+            if partial is not None and not partial_spilled:
                 self.prefix.acquire([partial.block])
         if need_new > self.allocator.num_free:
             if self.prefix is not None:
-                self.prefix.release(full)
-                if partial is not None:
+                self.prefix.release(dev_full)
+                if partial is not None and not partial_spilled:
                     self.prefix.release([partial.block])
             return False  # out of blocks: backpressure until frees
+        payloads = {h: self.spill.pop(h) for h in spilled}
+        cow_payload = self.spill.get(partial.block) if partial_spilled else None
+        # chain state must be read while the handles are still in the index
+        # (promote re-keys them)
+        reg_parent = self.prefix.parent_hash(full) if self.prefix is not None else 0
         new_blocks = self.allocator.alloc(need_new)
-        req.blocks = full + new_blocks
+        ni = 0
+        blocks: list[int] = []
+        for b in full:
+            if not is_spilled(b):
+                if b in self._restoring:
+                    # promoted by an earlier admission, rows still in
+                    # flight: this sharer waits on the same task
+                    req.pending_restores.add(b)
+                blocks.append(b)
+                continue
+            nb = new_blocks[ni]
+            ni += 1
+            self.prefix.promote(b, nb)
+            self._queue_restore(nb, payloads[b], cow=False, req=req)
+            blocks.append(nb)
+        req.blocks = blocks + new_blocks[ni:]
         matched = len(full) * self.block_size
         if partial is not None:
             # copy-on-write: the partially-shared block's rows move into the
             # request's first private block; its suffix is overwritten by the
             # first prefill chunk while the cached original stays immutable
-            self.cache = self._copy_block(
-                self.cache,
-                jnp.asarray(partial.block, jnp.int32),
-                jnp.asarray(new_blocks[0], jnp.int32),
-            )
-            self.prefix.release([partial.block])
+            # (device tier) or parked in the spill pool (host tier)
+            dst = new_blocks[ni]
+            if partial_spilled:
+                self._queue_restore(dst, cow_payload, cow=True, req=req)
+            else:
+                self.cache = self._copy_block(
+                    self.cache,
+                    jnp.asarray(partial.block, jnp.int32),
+                    jnp.asarray(dst, jnp.int32),
+                )
+                self.prefix.release([partial.block])
             matched += partial.tokens
             self.prefix_partial_hits += 1
         if matched:
@@ -890,10 +1102,24 @@ class InferenceEngine:
             self.prefix_hit_tokens += matched
             req.prefix_hit_tokens += matched  # accumulates across resumes
             self._c_prefix_hit.inc(matched)
+        spill_matched = len(spilled) * self.block_size + (
+            partial.tokens if partial_spilled else 0
+        )
+        if spill_matched:
+            self.spill_hits += 1
+            self.spill_hit_tokens += spill_matched
+            self._c_spill_hit.inc(spill_matched)
+            self.tracer.instant(
+                "spill_hit",
+                track=slot_track(slot),
+                req_id=req.req_id,
+                tokens=spill_matched,
+                blocks=len(spilled) + int(partial_spilled),
+            )
         if self.prefix is not None:
             # registration resumes after the matched (already indexed) blocks
             req.reg_block = len(full)
-            req.reg_parent = self.prefix.parent_hash(full)
+            req.reg_parent = reg_parent
         req.prefill_pos = matched
         req.prefilling = True
         req.state = RequestState.ACTIVE
@@ -1500,4 +1726,11 @@ class InferenceEngine:
                 s["prefix_hit_tokens"] = self.prefix_hit_tokens
                 s["prefix_hit_rate"] = self.prefix_hit_tokens / served if served else 0.0
                 s.update({f"prefix_{k}": v for k, v in self.prefix.stats().items()})
+            if self.spill is not None:
+                s["spill_hits"] = self.spill_hits
+                s["spill_hit_tokens"] = self.spill_hit_tokens
+                s["restores"] = self.restores
+                s["restores_cancelled"] = self.restores_cancelled
+                s["restores_pending"] = len(self._restore_q)
+                s.update({f"spill_{k}": v for k, v in self.spill.stats().items()})
         return s

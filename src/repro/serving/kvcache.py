@@ -223,6 +223,37 @@ def graft_prefill_into_blocks(cfg, pool_cache, raw_cache, blocks, seq_filled: in
     return new
 
 
+def gather_block_rows(pool_cache, block):
+    """One physical block's K/V rows (and scale rows) as a standalone dict
+    of ``(L, bs, ...)`` arrays — the device side of a spill-tier demotion.
+
+    Dispatched *at evict time*, before the allocator hands the block out for
+    reuse: JAX arrays are immutable, so the gathered value pins the rows even
+    though every subsequent pool update functionally overwrites that block.
+    The host copy (``np.asarray`` in ``serving.spill``) is deferred through
+    the pool's staging ring so the D2H transfer overlaps with decode."""
+    out = {}
+    for name in ("k", "v", "k_scale", "v_scale"):
+        if name in pool_cache:
+            out[name] = jnp.take(pool_cache[name], block, axis=1)
+    return out
+
+
+def restore_block_rows(pool_cache, blocks, rows):
+    """Scatter previously-spilled rows back into the pools — the device side
+    of a spill-tier promotion, batched: ``blocks`` is ``(n,)`` int32 target
+    block ids and each ``rows`` leaf is ``(L, n, bs, ...)`` (n gathered
+    payloads stacked on the block axis), so one jitted dispatch swaps in a
+    whole restore budget.  Rows are cast to the pool dtype (spill
+    decompression returns float; int8 pools carry their scale leaves in
+    ``rows`` verbatim).  ``tbl`` and recurrent states pass through."""
+    new = dict(pool_cache)
+    for name, stacked in rows.items():
+        leaf = pool_cache[name]  # (L, N, bs, ...)
+        new[name] = leaf.at[:, blocks].set(stacked.astype(leaf.dtype))
+    return new
+
+
 def copy_block_rows(pool_cache, src, dst):
     """Copy one physical block's K/V (and scales) to another block: the
     copy-on-write step behind partial prefix hits.  A request that shares

@@ -31,6 +31,16 @@ goes one of two ways:
   finds the free list empty.  Cached blocks therefore count as free for
   admission gating — they are reclaimable on demand.
 
+Eviction is **tier-aware**: the ``on_evict`` callback may return a tier tag
+— ``"spilled"`` when the prefix index demoted the block's content into a
+host-RAM ``serving.spill.SpillPool`` (the entry stays matchable), anything
+else meaning the content was dropped — and the allocator accounts the two
+outcomes separately (``evictions_spilled`` / ``evictions_dropped``).
+``uncache`` is the stranding repair path: when an index unmap cascade finds
+a still-cached descendant that can no longer be matched (its parent's entry
+is gone), the block moves straight from the cached pool to the free list
+instead of leaking reclaimable-but-unreachable capacity.
+
 Blocks are position-independent (any physical block can hold any logical
 block), so "fragmentation" here is purely a locality concern: a scattered
 free list means scattered DMA reads on real hardware.  ``fragmentation()``
@@ -81,11 +91,16 @@ class BlockAllocator:
         self._free = list(range(num_blocks - 1, 0, -1))
         self._ref: dict[int, int] = {}  # live block -> refcount
         self._cached: OrderedDict[int, None] = OrderedDict()  # refcount-0, LRU order
-        self.on_evict = on_evict  # called with the block id before reclaiming it
+        # called with the block id before reclaiming it; may return a tier
+        # tag ("spilled" = content demoted to a host pool, else dropped)
+        self.on_evict = on_evict
         self.peak_in_use = 0
         self.total_allocs = 0
         self.total_frees = 0
         self.evictions = 0
+        self.evictions_spilled = 0  # content demoted to the host spill tier
+        self.evictions_dropped = 0  # content destroyed
+        self.stranded_reclaims = 0  # cached-but-unreachable blocks uncache()d
         self._metrics = None  # attach_metrics publishes occupancy per mutation
 
     def attach_metrics(self, registry) -> None:
@@ -99,6 +114,8 @@ class BlockAllocator:
         self._m_allocs = registry.counter("pool_allocs_total", "blocks allocated (cached revivals count)")
         self._m_frees = registry.counter("pool_frees_total", "blocks freed or parked in the LRU")
         self._m_evictions = registry.counter("pool_evictions_total", "LRU cached blocks reclaimed on demand")
+        self._m_evict_spilled = registry.counter("pool_evictions_spilled_total", "evicted blocks demoted to the host spill tier")
+        self._m_stranded = registry.counter("pool_stranded_reclaims_total", "cached-but-unreachable blocks returned to the free list")
         self._publish()
 
     def _publish(self) -> None:
@@ -155,11 +172,16 @@ class BlockAllocator:
     # -- alloc / free --------------------------------------------------
     def _evict_one(self) -> int:
         block, _ = self._cached.popitem(last=False)  # oldest entry
-        if self.on_evict is not None:
-            self.on_evict(block)
+        tier = self.on_evict(block) if self.on_evict is not None else None
+        if tier == "spilled":
+            self.evictions_spilled += 1
+        else:
+            self.evictions_dropped += 1
         self.evictions += 1
         if self._metrics is not None:
             self._m_evictions.inc()
+            if tier == "spilled":
+                self._m_evict_spilled.inc()
         return block
 
     def alloc(self, n: int) -> list[int]:
@@ -234,6 +256,22 @@ class BlockAllocator:
                     self._m_frees.inc()
         self._publish()
 
+    def uncache(self, block: int) -> None:
+        """Return a refcount-0 cached block straight to the free list — the
+        stranding repair: an index unmap cascade found this block cached but
+        unreachable for matching (its parent entry is gone), so parking it
+        in the LRU any longer only wastes reclaimable capacity.  Not an
+        eviction (``on_evict`` already unmapped it) and not a new free (its
+        park in the cached pool counted one)."""
+        if block not in self._cached:
+            raise ValueError(f"block {block} is not in the cached pool")
+        del self._cached[block]
+        self._free.append(block)
+        self.stranded_reclaims += 1
+        if self._metrics is not None:
+            self._m_stranded.inc()
+        self._publish()
+
     def stats(self) -> dict:
         return {
             "capacity": self.capacity,
@@ -243,5 +281,8 @@ class BlockAllocator:
             "peak_in_use": self.peak_in_use,
             "total_allocs": self.total_allocs,
             "total_frees": self.total_frees,
+            "evictions_spilled": self.evictions_spilled,
+            "evictions_dropped": self.evictions_dropped,
+            "stranded_reclaims": self.stranded_reclaims,
             "fragmentation": round(self.fragmentation(), 3),
         }

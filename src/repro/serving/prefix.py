@@ -30,19 +30,37 @@ Lifecycle is refcount-driven (``serving.paged.BlockAllocator``): a matched
 block gains one reference per sharer; ``release`` routes indexed blocks to
 the allocator's LRU cached pool instead of the free list, so a prefix stays
 matchable after its last user finishes and is only evicted (``on_evict``
-unmaps it here) when an allocation actually needs the space.  Evicting a
-parent can strand still-cached children — they become unreachable for
-matching (walks start at the root) and simply age out of the LRU.
+fires here) when an allocation actually needs the space.
+
+**Tiers**: with a ``serving.spill.SpillPool`` attached (``attach_spill``),
+eviction *demotes* instead of dropping — the block's K/V rows move to host
+RAM and the entry is re-keyed under the pool's negative **spill handle**
+(``is_spilled``), staying fully matchable: ``match`` walks chains through
+mixed device/spilled entries unchanged.  A hit on a spilled entry is
+``promote``d back to a freshly-allocated device block (the engine swaps the
+rows in asynchronously); a cancelled swap-in is ``demote``d back.  Without
+a pool (or when the pool refuses), eviction drops the entry — and runs the
+**stranding cascade**: dropping a parent makes every descendant unreachable
+for matching (walks start at the root), so ``_drop_entry`` unmaps the whole
+subtree, discards spilled descendants from the pool and returns cached
+device descendants to the free list (``BlockAllocator.uncache``) instead of
+letting unreachable-but-resident blocks leak LRU capacity.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 from repro.serving.paged import BlockAllocator
 
 _ROOT = 0  # chain-hash seed
+
+
+def is_spilled(block: int) -> bool:
+    """Tier tag of an index id: physical device blocks are >= 1 (0 is the
+    null block); spill handles are negative (``SpillPool`` counts down)."""
+    return block < 0
 
 
 def chain_hash(parent: int, tokens: tuple[int, ...]) -> int:
@@ -82,10 +100,24 @@ class PrefixIndex:
     meta: dict[int, _Entry] = field(default_factory=dict)  # block -> entry
     children: dict[int, list[int]] = field(default_factory=dict)  # parent hash -> blocks
     registered: int = 0
+    spill: Optional[object] = field(default=None, repr=False)  # serving.spill.SpillPool
+    _fetch: Optional[Callable[[int], dict]] = field(default=None, repr=False)
+    spilled: int = 0  # entries demoted to the host tier
+    promoted: int = 0  # spilled entries rewired back to device blocks
+    demoted: int = 0  # cancelled swap-ins re-parked in the pool
+    stranded_dropped: int = 0  # descendants unmapped by the cascade
     _metrics: Optional[object] = field(default=None, repr=False)
 
     def __post_init__(self):
         self.allocator.on_evict = self._on_evict
+
+    def attach_spill(self, pool, fetch: Callable[[int], dict]) -> None:
+        """Enable the host spill tier: ``pool`` holds demoted rows, ``fetch``
+        (engine-provided) gathers one device block's K/V rows at evict time.
+        The pool's own byte-budget drops cascade back through this index."""
+        self.spill = pool
+        self._fetch = fetch
+        pool.on_drop = self._drop_entry
 
     def attach_metrics(self, registry) -> None:
         """Publish index size and registration volume into a
@@ -212,18 +244,106 @@ class PrefixIndex:
         self._publish()
         return start_block, parent
 
-    def _on_evict(self, block: int) -> None:
-        ent = self.meta.pop(block, None)
+    def _rekey(self, old: int, new: int, ent: _Entry) -> None:
+        """Move an entry between ids (device block <-> spill handle) without
+        touching the chain structure: hash map, meta and the parent's child
+        list all follow; entries keyed by *hash* (children of this entry)
+        are untouched — descendants stay reachable through the chain walk."""
+        del self.meta[old]
+        self.meta[new] = ent
+        self.by_hash[ent.hash] = new
+        sibs = self.children.get(ent.parent)
+        if sibs and old in sibs:
+            sibs[sibs.index(old)] = new
+
+    def _on_evict(self, block: int) -> Optional[str]:
+        """Allocator LRU eviction: demote the entry to the spill tier when a
+        pool is attached and admits it, else drop it (with the stranding
+        cascade).  The returned tier tag feeds the allocator's accounting."""
+        ent = self.meta.get(block)
+        if ent is None:
+            return None
+        if self.spill is not None and self._fetch is not None:
+            handle = self.spill.put(self._fetch(block))
+            if handle is not None:
+                if block not in self.meta:
+                    # reentrancy: the put's own byte-budget drop cascaded
+                    # through an *ancestor* of this entry mid-spill, so the
+                    # chain above it is gone and the rows are unmatchable —
+                    # discard them rather than strand them in the pool
+                    self.spill.discard(handle)
+                    return "dropped"
+                self._rekey(block, handle, ent)
+                self.spilled += 1
+                self._publish()
+                return "spilled"
+        self._drop_entry(block)
+        return "dropped"
+
+    def promote(self, handle: int, block: int) -> None:
+        """Rewire a spilled entry onto a freshly-allocated device block (the
+        caller has popped the rows from the pool and owns the swap-in)."""
+        self._rekey(handle, block, self.meta[handle])
+        self.promoted += 1
+        self._publish()
+
+    def demote(self, block: int, payload: dict) -> None:
+        """Inverse of ``promote`` for a cancelled swap-in: re-park the rows
+        in the pool and re-key the entry back to a spill handle.  When the
+        pool refuses, the entry drops (the device block was never written,
+        so it must not stay indexed — a later match would read garbage)."""
+        ent = self.meta.get(block)
         if ent is None:
             return
-        if self.by_hash.get(ent.hash) == block:
+        handle = self.spill.put(payload) if self.spill is not None else None
+        if handle is None:
+            self._drop_entry(block)
+            return
+        if block not in self.meta:
+            # same reentrancy guard as ``_on_evict``: the put's budget drop
+            # cascaded through an ancestor and already unmapped this entry
+            self.spill.discard(handle)
+            return
+        self._rekey(block, handle, ent)
+        self.demoted += 1
+        self._publish()
+
+    def _drop_entry(self, bid: int) -> None:
+        """Unmap one entry and cascade over its now-unreachable descendants
+        (matching always walks from the root, so a dropped parent strands
+        its whole subtree): spilled descendants leave the pool, cached
+        refcount-0 device descendants return to the free list
+        (``uncache``), live ones are merely unindexed — their eventual
+        release plain-frees them.  Also the ``SpillPool.on_drop`` hook."""
+        ent = self.meta.pop(bid, None)
+        if ent is None:
+            return
+        if self.by_hash.get(ent.hash) == bid:
             del self.by_hash[ent.hash]
         sibs = self.children.get(ent.parent)
-        if sibs and block in sibs:
-            sibs.remove(block)
+        if sibs and bid in sibs:
+            sibs.remove(bid)
             if not sibs:
                 del self.children[ent.parent]
+        for child in list(self.children.get(ent.hash, ())):
+            self.stranded_dropped += 1
+            if is_spilled(child):
+                if self.spill is not None:
+                    self.spill.discard(child)
+            elif self.allocator.is_cached(child):
+                self.allocator.uncache(child)
+            self._drop_entry(child)
         self._publish()
 
     def stats(self) -> dict:
-        return {"entries": len(self.by_hash), "registered": self.registered}
+        spilled_entries = sum(1 for b in self.meta if is_spilled(b))
+        return {
+            "entries": len(self.by_hash),
+            "device_entries": len(self.by_hash) - spilled_entries,
+            "spilled_entries": spilled_entries,
+            "registered": self.registered,
+            "spilled": self.spilled,
+            "promoted": self.promoted,
+            "demoted": self.demoted,
+            "stranded_dropped": self.stranded_dropped,
+        }

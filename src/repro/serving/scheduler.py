@@ -95,6 +95,9 @@ class Request:
     slot: Optional[int] = None
     blocks: list[int] = field(default_factory=list)  # paged: owned physical blocks
     freed_blocks: int = 0  # paged: leading blocks already reclaimed (sliding window)
+    # spill tier: device blocks whose rows are still in flight from the host
+    # pool — the request may not prefill or publish until this empties
+    pending_restores: set[int] = field(default_factory=set)
     prefill_pos: int = 0  # chunked: context tokens already in the cache
     prefilling: bool = False  # chunked: admitted but context not fully processed
     preemptions: int = 0  # times this request was evicted and requeued
@@ -179,12 +182,20 @@ class SchedulerCore:
     ==================  =====================================================
     """
 
-    def __init__(self, ops, *, policy: str = "slo", prefill_budget: int = 0):
+    def __init__(
+        self,
+        ops,
+        *,
+        policy: str = "slo",
+        prefill_budget: int = 0,
+        restore_budget: int = 4,
+    ):
         if policy not in POLICIES:
             raise ValueError(f"policy={policy!r} (choose from {POLICIES})")
         self.ops = ops
         self.policy = policy
         self.prefill_budget = prefill_budget
+        self.restore_budget = restore_budget  # spill swap-ins executed per step
         self.queue: list[Request] = []  # maintained in policy order
         self.prefilling: list[Request] = []  # admission (FCFS) order
         self.preemptions = 0  # eviction decisions taken
@@ -272,19 +283,42 @@ class SchedulerCore:
         if not self.ops.chunked():
             return
         budget = self.prefill_budget if self.prefill_budget > 0 else math.inf
-        while self.prefilling and budget > 0:
-            req = self.prefilling[0]
+        restoring = getattr(self.ops, "restoring", None)
+        i = 0
+        while i < len(self.prefilling) and budget > 0:
+            req = self.prefilling[i]
+            if restoring is not None and restoring(req):
+                # spill swap-ins still in flight: the request's block table
+                # points at rows the restore pass has not written yet, so it
+                # must not prefill (or publish) this step.  Skip — don't
+                # stall the budget behind it — and let younger admitted
+                # prompts spend the tokens; FCFS order is preserved among
+                # the runnable ones.
+                i += 1
+                continue
             take = int(min(budget, req.prefill_target - req.prefill_pos))
             logits = None
             for c in binary_chunks(take):
                 logits = self.ops.run_chunk(req, c)
             budget -= take
             if req.prefill_pos >= req.prefill_target:
-                self.prefilling.pop(0)
+                self.prefilling.pop(i)
                 self.ops.finish_prefill(req, logits)
+            else:
+                i += 1
+
+    def _restore(self) -> None:
+        """Execute up to ``restore_budget`` queued spill swap-ins (host ->
+        device block-row copies) before prefill, so requests admitted
+        against spilled prefix entries become runnable as early as
+        possible.  Engines without a spill tier simply lack the op."""
+        run = getattr(self.ops, "run_restores", None)
+        if run is not None:
+            run(self.restore_budget)
 
     def schedule(self) -> None:
         """One scheduling pass: admission (with preemption under the SLO
-        policy) followed by the chunked-prefill budget."""
+        policy), spill restores, then the chunked-prefill budget."""
         self._admit()
+        self._restore()
         self._prefill()

@@ -1,0 +1,310 @@
+"""Host-memory spill tier for evicted prefix-cache blocks.
+
+Isambard-AI backs its GPU HBM with two all-flash capacity tiers so hot
+working sets can overflow device memory without losing locality; this module
+is the serving-stack analogue.  Without it, every LRU eviction from the
+``BlockAllocator``'s cached pool destroys the block's K/V content — the
+effective prefix cache is capped at one device's HBM.  With a ``SpillPool``
+attached (``InferenceEngine(spill_bytes=...)``), eviction instead *demotes*
+the block: its K/V rows are gathered off the device pool and parked in host
+RAM, the ``PrefixIndex`` entry stays matchable under a negative **spill
+handle**, and a later prefix hit swaps the rows back into freshly-allocated
+device blocks (``promote``) instead of re-running prefill.
+
+Tier state machine for one prefix-indexed block::
+
+      alloc            free_cached          _evict_one
+    free ──► in-use ──────────► cached ─────────────────► spilled
+                 ▲                ▲        (SpillPool.put)    │
+                 │  reuse_cached  │                           │ prefix hit:
+                 │  (device hit)  │                           │ promote + swap-in
+                 └────────────────┘◄──────────────────────────┘
+                                      restore into a fresh
+                                      device block (refcount 1)
+
+    spilled ──► dropped   when the pool's byte budget forces out its own
+                          LRU entry (``on_drop`` cascades the index unmap)
+
+Design points:
+
+* **Handles are negative ints** (-1, -2, ...), disjoint from physical block
+  ids (>= 1; 0 is the null block) — the ``PrefixIndex`` keys entries by id,
+  so a spilled entry needs no second index, just a tier-distinguishable id.
+* **Double-buffered writeback**: ``put`` *stages* the raw device rows (the
+  jitted gather has already been dispatched by the engine; JAX arrays are
+  immutable, so the value is pinned even though the pool block is about to
+  be overwritten) and defers the host copy.  Only when a staged entry is
+  pushed past ``staging_depth`` by newer spills is it compressed and
+  materialized to host numpy — ``np.asarray`` is the device→host sync — so
+  the transfer overlaps with whatever decode steps run in between instead
+  of blocking the eviction site.  A restore that catches its entry still
+  staged is a free device-to-device move (never left the accelerator).
+* **At-rest compression** (``mode``): ``"cache"`` stores rows in the pool's
+  own dtype (bit-exact roundtrip; with ``quantize_kv=True`` pools the rows
+  are already int8+scales, so "at rest" is int8 for free); ``"int8"``
+  quantizes float K/V leaves per-(token, head) via ``serving.kvquant``;
+  ``"fp8"`` uses the PR-1 e4m3 kernels' saturating cast with one amax scale
+  per leaf.  Compression applies at materialization; ``get``/``pop``
+  always return rows decompressed back to float (the engine's scatter casts
+  to the pool dtype).
+* **Byte budget**: ``capacity_bytes`` bounds the *compressed* host bytes
+  (computed analytically from shapes, so accounting never waits on a
+  device sync).  An admission that would overflow drops the pool's own LRU
+  entries first, notifying ``on_drop(handle)`` so the prefix index can
+  unmap the entry and cascade to any stranded descendants.
+* **TP**: spilled rows are per-shard in a real multi-host deployment; on a
+  single-host mesh ``np.asarray`` of a head-sharded leaf materializes the
+  full logical row (see docs/serving.md, "Tiered KV cache").
+
+The pool is engine-agnostic: payloads are just dicts of arrays, so the
+Hypothesis state machine in ``tests/test_paged.py`` drives it with tiny
+numpy payloads against the allocator invariants.
+"""
+
+from __future__ import annotations
+
+import warnings
+from collections import OrderedDict
+from typing import Callable, Optional
+
+import numpy as np
+
+SPILL_MODES = ("cache", "int8", "fp8")
+
+_QSUFFIX = "@qscale"  # compressed-leaf sibling key for quantization scales
+
+
+def _is_float_leaf(name: str, arr) -> bool:
+    """Leaves eligible for lossy at-rest compression: float K/V rows.
+    Scale leaves (already fp32 metadata) and int8 rows pass through raw."""
+    return not name.endswith("_scale") and np.issubdtype(
+        np.dtype(arr.dtype), np.floating
+    )
+
+
+class SpillPool:
+    """Byte-budgeted host-RAM pool of spilled KV blocks (LRU, compressed)."""
+
+    def __init__(
+        self,
+        capacity_bytes: int,
+        *,
+        mode: str = "cache",
+        staging_depth: int = 2,
+        on_drop: Optional[Callable[[int], None]] = None,
+    ):
+        if capacity_bytes <= 0:
+            raise ValueError(f"capacity_bytes={capacity_bytes} (need > 0)")
+        if mode not in SPILL_MODES:
+            raise ValueError(f"mode={mode!r} (choose from {SPILL_MODES})")
+        if staging_depth < 0:
+            raise ValueError(f"staging_depth={staging_depth}")
+        self.capacity_bytes = capacity_bytes
+        self.mode = mode
+        self.staging_depth = staging_depth
+        self.on_drop = on_drop  # called AFTER the entry is removed
+        self._next = -1  # handles count down: -1, -2, ...
+        self._payload: OrderedDict[int, dict] = OrderedDict()  # LRU order
+        self._nbytes: dict[int, int] = {}
+        self._staged: set[int] = set()  # handles whose payload is still device-side
+        self._staging_order: list[int] = []  # oldest first
+        self.bytes_used = 0
+        self.spills = 0  # entries admitted
+        self.drops = 0  # entries evicted by the byte budget
+        self.restores = 0  # entries swapped back to device (engine-reported)
+        self.refused = 0  # put() refusals (entry alone exceeds capacity)
+        self._metrics = None
+
+    def attach_metrics(self, registry) -> None:
+        self._metrics = registry
+        self._m_blocks = registry.gauge("spill_blocks", "KV blocks resident in the host spill tier")
+        self._m_bytes = registry.gauge("spill_bytes_used", "compressed host bytes held by spilled blocks")
+        self._m_spills = registry.counter("spill_blocks_total", "blocks demoted to the host tier")
+        self._m_drops = registry.counter("spill_drops_total", "spilled blocks evicted by the byte budget")
+        self._publish()
+
+    def _publish(self) -> None:
+        if self._metrics is not None:
+            self._m_blocks.set(len(self._payload))
+            self._m_bytes.set(self.bytes_used)
+
+    def __len__(self) -> int:
+        return len(self._payload)
+
+    def __contains__(self, handle: int) -> bool:
+        return handle in self._payload
+
+    # -- byte accounting (analytic: no device syncs) --------------------
+    def _leaf_nbytes(self, name: str, arr) -> int:
+        size = int(np.prod(arr.shape, dtype=np.int64))
+        if self.mode == "cache" or not _is_float_leaf(name, arr):
+            return size * np.dtype(arr.dtype).itemsize
+        if self.mode == "int8":
+            # int8 rows + one fp32 scale per (..., head) row
+            return size + int(np.prod(arr.shape[:-1], dtype=np.int64)) * 4
+        return size + 4  # fp8: e4m3 rows + one fp32 scale per leaf
+
+    def entry_nbytes(self, payload: dict) -> int:
+        return sum(self._leaf_nbytes(n, a) for n, a in payload.items())
+
+    # -- compression codecs ---------------------------------------------
+    def _compress(self, payload: dict) -> dict:
+        """Raw device/host rows -> compressed host numpy (the D2H sync)."""
+        out = {}
+        for name, arr in payload.items():
+            if self.mode == "cache" or not _is_float_leaf(name, arr):
+                out[name] = np.asarray(arr)
+            elif self.mode == "int8":
+                from repro.serving.kvquant import quantize
+
+                q, scale = quantize(arr)
+                out[name] = np.asarray(q)
+                out[name + _QSUFFIX] = np.asarray(scale)
+            else:  # fp8 at rest: one saturating e4m3 cast per leaf
+                from repro.fp8.quantize import E4M3, compute_scale, quantize, tensor_amax
+
+                scale = compute_scale(tensor_amax(arr), E4M3)
+                out[name] = np.asarray(quantize(arr, scale, E4M3))
+                out[name + _QSUFFIX] = np.asarray(scale)
+        return out
+
+    def _decompress(self, comp: dict) -> dict:
+        """Compressed host numpy -> float rows (engine casts to pool dtype)."""
+        import jax.numpy as jnp
+
+        out = {}
+        for name, arr in comp.items():
+            if name.endswith(_QSUFFIX):
+                continue
+            scale = comp.get(name + _QSUFFIX)
+            if scale is None:
+                out[name] = jnp.asarray(arr)
+            elif self.mode == "int8":
+                from repro.serving.kvquant import dequantize
+
+                out[name] = dequantize(jnp.asarray(arr), jnp.asarray(scale), jnp.float32)
+            else:
+                from repro.fp8.quantize import dequantize
+
+                out[name] = dequantize(jnp.asarray(arr), jnp.asarray(scale), jnp.float32)
+        return out
+
+    # -- staging ring (the double buffer) -------------------------------
+    def _materialize(self, handle: int) -> None:
+        if handle not in self._staged:
+            return
+        self._staged.discard(handle)
+        if handle in self._staging_order:
+            self._staging_order.remove(handle)
+        self._payload[handle] = self._compress(self._payload[handle])
+
+    def flush(self) -> None:
+        """Materialize every staged entry (tests / shutdown)."""
+        for h in list(self._staging_order):
+            self._materialize(h)
+
+    # -- admission / eviction -------------------------------------------
+    def put(self, payload: dict) -> Optional[int]:
+        """Admit one block's raw rows; returns the spill handle, or None
+        when the entry alone exceeds the byte budget (caller drops it).
+        May evict the pool's own LRU entries (``on_drop`` per victim)."""
+        nbytes = self.entry_nbytes(payload)
+        if nbytes > self.capacity_bytes:
+            self.refused += 1
+            return None
+        while self.bytes_used + nbytes > self.capacity_bytes:
+            victim = next(iter(self._payload))
+            self._drop(victim)
+        handle = self._next
+        self._next -= 1
+        self._payload[handle] = payload
+        self._nbytes[handle] = nbytes
+        self.bytes_used += nbytes
+        self._staged.add(handle)
+        self._staging_order.append(handle)
+        # drain the staging ring: entries pushed past the depth pay their
+        # compress + host copy now, overlapped with the steps since their put
+        while len(self._staging_order) > self.staging_depth:
+            self._materialize(self._staging_order[0])
+        self.spills += 1
+        if self._metrics is not None:
+            self._m_spills.inc()
+        self._publish()
+        return handle
+
+    def _drop(self, handle: int) -> None:
+        self._remove(handle)
+        self.drops += 1
+        if self._metrics is not None:
+            self._m_drops.inc()
+        if self.on_drop is not None:
+            self.on_drop(handle)
+
+    def _remove(self, handle: int) -> None:
+        del self._payload[handle]
+        self.bytes_used -= self._nbytes.pop(handle)
+        self._staged.discard(handle)
+        if handle in self._staging_order:
+            self._staging_order.remove(handle)
+        self._publish()
+
+    def discard(self, handle: int) -> None:
+        """Remove an entry without the ``on_drop`` callback (the prefix
+        index calls this from its own unmap cascade)."""
+        if handle in self._payload:
+            self._remove(handle)
+            self.drops += 1
+            if self._metrics is not None:
+                self._m_drops.inc()
+
+    # -- lookup / restore -----------------------------------------------
+    def touch(self, handle: int) -> None:
+        """LRU bump on a match."""
+        if handle in self._payload:
+            self._payload.move_to_end(handle)
+
+    def get(self, handle: int) -> dict:
+        """The entry's rows, decompressed, without removing it (partial-hit
+        copy-on-write keeps the canonical spilled entry in place)."""
+        payload = self._payload[handle]
+        self._payload.move_to_end(handle)
+        if handle in self._staged:
+            return dict(payload)  # raw device rows: free D2D restore
+        return self._decompress(payload)
+
+    def pop(self, handle: int) -> dict:
+        """Remove the entry and return its rows, decompressed.  The caller
+        owns the payload from here — a restore admission pops *before*
+        allocating device blocks so eviction churn inside ``alloc`` can
+        never LRU-drop an entry that is about to be swapped back in."""
+        payload = self._payload[handle]
+        staged = handle in self._staged
+        self._remove(handle)
+        return dict(payload) if staged else self._decompress(payload)
+
+    def stats(self) -> dict:
+        return {
+            "blocks": len(self._payload),
+            "bytes_used": self.bytes_used,
+            "capacity_bytes": self.capacity_bytes,
+            "mode": self.mode,
+            "staged": len(self._staged),
+            "spills": self.spills,
+            "drops": self.drops,
+            "restores": self.restores,
+            "refused": self.refused,
+        }
+
+
+def warn_if_fp8_over_int8(quantize_kv: bool, mode: str) -> str:
+    """fp8-at-rest over an int8 pool would quantize quantized ints; fall
+    back to the exact pool-native bytes instead."""
+    if quantize_kv and mode == "fp8":
+        warnings.warn(
+            "spill_dtype='fp8' over an int8 (quantize_kv) pool would re-quantize "
+            "int8 rows; spilling pool-native int8+scales instead",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        return "cache"
+    return mode

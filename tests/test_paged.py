@@ -396,3 +396,195 @@ def test_cache_dtype_knob(setup):
     r = bf16.submit([5, 9, 12], max_new_tokens=4)
     bf16.run_until_drained()
     assert len(r.generated) == 4
+
+
+# ---------------------------------------------------------------------------
+# tiered allocator core: SpillPool unit behaviour + Hypothesis state machine
+# ---------------------------------------------------------------------------
+
+
+def _tiny_rows(tag: float) -> dict:
+    """A recognizable 8-byte payload standing in for one block's K/V rows."""
+    return {"k": np.full((2,), tag, np.float32)}
+
+
+def test_spill_pool_roundtrip_and_budget():
+    from repro.serving import SpillPool
+
+    drops = []
+    pool = SpillPool(16, mode="cache", staging_depth=0, on_drop=drops.append)
+    h1 = pool.put(_tiny_rows(1.0))
+    h2 = pool.put(_tiny_rows(2.0))
+    assert h1 < 0 and h2 < 0 and h1 != h2, "handles are distinct negatives"
+    assert pool.bytes_used == 16 and len(pool) == 2
+    h3 = pool.put(_tiny_rows(3.0))  # over budget: LRU (h1) drops
+    assert drops == [h1] and h1 not in pool and len(pool) == 2
+    assert float(np.asarray(pool.get(h2)["k"])[0]) == 2.0  # get keeps the entry
+    h4 = pool.put(_tiny_rows(4.0))  # h2 was LRU-bumped by get -> h3 drops
+    assert drops == [h1, h3]
+    assert float(np.asarray(pool.pop(h4)["k"])[0]) == 4.0  # pop removes
+    assert h4 not in pool and pool.bytes_used == 8
+    assert pool.put(_tiny_rows(9.0) | {"pad": np.zeros(30, np.float32)}) is None
+    assert pool.refused == 1, "an entry alone exceeding capacity is refused"
+    s = pool.stats()
+    assert s["spills"] == 4 and s["drops"] == 2 and s["blocks"] == 1
+
+
+def test_spill_pool_staging_defers_materialization():
+    from repro.serving import SpillPool
+
+    pool = SpillPool(1 << 20, mode="cache", staging_depth=2)
+    h1, h2, h3 = (pool.put(_tiny_rows(float(i))) for i in (1, 2, 3))
+    # depth 2: h1 was pushed out of the staging ring by h3's put
+    assert pool.stats()["staged"] == 2
+    assert isinstance(pool._payload[h1]["k"], np.ndarray), "h1 materialized to host"
+    pool.flush()
+    assert pool.stats()["staged"] == 0
+    for h, tag in ((h1, 1.0), (h2, 2.0), (h3, 3.0)):
+        assert float(np.asarray(pool.get(h)["k"])[0]) == tag
+
+
+def test_allocator_uncache_is_stranding_repair_only():
+    a = BlockAllocator(5)
+    blocks = a.alloc(2)
+    a.free_cached(blocks)
+    a.uncache(blocks[0])
+    assert a.stranded_reclaims == 1 and not a.is_cached(blocks[0])
+    assert a.num_free == 4 and a.blocks_in_use == 0
+    with pytest.raises(ValueError):
+        a.uncache(blocks[0])  # not cached any more
+    with pytest.raises(ValueError):
+        a.uncache(a.alloc(1)[0])  # live blocks can't be uncached
+
+
+def test_tiered_allocator_state_machine():
+    """Random alloc/incref/free/free_cached/restore/uncache sequences against
+    a BlockAllocator whose evictions spill into a byte-budgeted SpillPool.
+    Invariants after every step: each block is in exactly ONE of
+    {free, in-use, cached}; spill handles partition separately; refcounts
+    never negative; capacity conserved; alloc never hands out the null
+    block, a handle, or a block the model already tracks; spilled payloads
+    roundtrip bit-exactly."""
+    pytest.importorskip("hypothesis")  # optional dep: property tests skip cleanly without it
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        invariant,
+        precondition,
+        rule,
+        run_state_machine_as_test,
+    )
+
+    from repro.serving import OutOfBlocks, SpillPool
+
+    class TieredMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.pool = SpillPool(4 * 8, mode="cache", staging_depth=1)  # 4 entries
+            self.pool.on_drop = self._on_drop
+            self.alloc_ = BlockAllocator(9, on_evict=self._on_evict)  # 8 usable
+            self.live: dict[int, int] = {}  # block -> model refcount
+            self.cached: list[int] = []  # model LRU order (oldest first)
+            self.spilled: dict[int, float] = {}  # handle -> expected payload tag
+
+        # -- the prefix index's tier hooks, minimally modelled ----------
+        def _on_evict(self, block):
+            self.cached.remove(block)
+            h = self.pool.put(_tiny_rows(float(block)))
+            if h is None:
+                return "dropped"
+            self.spilled[h] = float(block)
+            return "spilled"
+
+        def _on_drop(self, handle):
+            self.spilled.pop(handle, None)
+
+        # -- rules ------------------------------------------------------
+        @rule(n=st.integers(0, 3))
+        def alloc(self, n):
+            if n > self.alloc_.num_free:
+                with pytest.raises(OutOfBlocks):
+                    self.alloc_.alloc(n)
+                return
+            got = self.alloc_.alloc(n)
+            assert len(got) == n and len(set(got)) == n
+            for b in got:
+                assert b >= 1, f"alloc handed out null/handle id {b}"
+                assert b not in self.live and b not in self.cached
+                self.live[b] = 1
+
+        @precondition(lambda self: self.live)
+        @rule(data=st.data())
+        def incref(self, data):
+            b = data.draw(st.sampled_from(sorted(self.live)))
+            self.alloc_.incref(b)
+            self.live[b] += 1
+
+        @precondition(lambda self: self.live)
+        @rule(data=st.data())
+        def free(self, data):
+            b = data.draw(st.sampled_from(sorted(self.live)))
+            self.alloc_.free([b])
+            self.live[b] -= 1
+            if not self.live[b]:
+                del self.live[b]
+
+        @precondition(lambda self: self.live)
+        @rule(data=st.data())
+        def free_cached(self, data):
+            b = data.draw(st.sampled_from(sorted(self.live)))
+            self.alloc_.free_cached([b])
+            self.live[b] -= 1
+            if not self.live[b]:
+                del self.live[b]
+                self.cached.append(b)
+
+        @precondition(lambda self: self.cached)
+        @rule(data=st.data())
+        def revive_cached(self, data):
+            b = data.draw(st.sampled_from(self.cached))
+            self.alloc_.reuse_cached(b)
+            self.cached.remove(b)
+            self.live[b] = 1
+
+        @precondition(lambda self: self.cached)
+        @rule(data=st.data())
+        def uncache(self, data):
+            b = data.draw(st.sampled_from(self.cached))
+            self.alloc_.uncache(b)
+            self.cached.remove(b)
+
+        @precondition(lambda self: self.spilled and self.alloc_.num_free > 0)
+        @rule(data=st.data())
+        def restore(self, data):
+            # the engine's swap-in admission: pop the payload FIRST, then
+            # allocate the destination (alloc may spill more entries)
+            h = data.draw(st.sampled_from(sorted(self.spilled)))
+            tag = self.spilled.pop(h)
+            payload = self.pool.pop(h)
+            assert float(np.asarray(payload["k"])[0]) == tag, "spill roundtrip corrupted rows"
+            got = self.alloc_.alloc(1)
+            self.live[got[0]] = 1
+
+        # -- invariants -------------------------------------------------
+        @invariant()
+        def tiers_partition(self):
+            a = self.alloc_
+            assert dict(a._ref) == self.live
+            assert list(a._cached) == self.cached
+            assert set(self.live).isdisjoint(self.cached)
+            assert all(rc >= 1 for rc in self.live.values())
+            assert a.blocks_in_use + len(a._free) + a.num_cached == a.capacity
+            assert a.num_free == a.capacity - a.blocks_in_use
+
+        @invariant()
+        def pool_consistent(self):
+            assert set(self.pool._payload) == set(self.spilled)
+            assert all(h < 0 for h in self.spilled)
+            assert self.pool.bytes_used <= self.pool.capacity_bytes
+            assert self.pool.bytes_used == 8 * len(self.spilled)
+
+    run_state_machine_as_test(
+        TieredMachine,
+        settings=settings(max_examples=25, stateful_step_count=50, deadline=None),
+    )

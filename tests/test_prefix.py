@@ -420,3 +420,93 @@ def test_shared_prefix_halves_prefill_tokens():
         if on:
             assert eng.stats()["prefix_hit_rate"] > 0.5
     assert toks["cached"] * 2 <= toks["uncached"], toks
+
+
+# ---------------------------------------------------------------------------
+# stranding hazard: an evicted parent leaves its cached children unreachable
+# ---------------------------------------------------------------------------
+
+
+def _spill_fetch(block):
+    """Stand-in for the engine's device gather: 8 recognizable bytes."""
+    return {"k": np.full((2,), float(block), np.float32)}
+
+
+def test_evicted_parent_reclaims_stranded_children_drop_tier():
+    """Matching always walks from the root, so dropping a chain's first
+    block makes every descendant unmatchable.  The eviction cascade must
+    unmap the whole subtree AND return still-cached descendants to the
+    free list (``uncache``) — without it they sit in the LRU pool as
+    unreachable-but-resident capacity until eviction churn gets to them."""
+    a = BlockAllocator(17)  # 16 usable
+    idx = PrefixIndex(a, 4)
+    toks = list(range(40, 52))  # 12 tokens = 3 chained blocks
+    blocks = a.alloc(3)
+    idx.register(toks, blocks, 12)
+    idx.release(blocks)  # whole chain parks in the LRU, oldest = blocks[0]
+    assert all(a.is_cached(b) for b in blocks) and len(idx) == 3
+    a.alloc(13)  # drain the free list; only the cached chain remains
+    got = a.alloc(1)  # forces eviction of the LRU entry: the chain's ROOT
+    assert got == [blocks[0]]
+    assert a.evictions_dropped == 1 and a.evictions_spilled == 0
+    # the cascade unmapped the children and repaired the stranding
+    assert len(idx) == 0 and idx.stranded_dropped == 2
+    assert a.stranded_reclaims == 2
+    assert not a.is_cached(blocks[1]) and not a.is_cached(blocks[2])
+    assert idx.match(toks + [99]) == ([], None)
+    # the reclaimed blocks are allocatable immediately
+    assert set(a.alloc(2)) == {blocks[1], blocks[2]}
+    assert a.num_free == 0
+
+
+def test_spilled_parent_keeps_children_matchable():
+    """Under the spill tier the same eviction DEMOTES instead: the parent
+    re-keys to a host-pool handle, descendants stay reachable through the
+    mixed-tier chain walk, and nothing is stranded."""
+    from repro.serving import SpillPool, is_spilled
+
+    a = BlockAllocator(17)
+    idx = PrefixIndex(a, 4)
+    idx.attach_spill(SpillPool(1 << 10, mode="cache"), _spill_fetch)
+    toks = list(range(60, 72))
+    blocks = a.alloc(3)
+    idx.register(toks, blocks, 12)
+    idx.release(blocks)
+    a.alloc(13)
+    a.alloc(1)  # evicts the root -> spilled, not dropped
+    assert a.evictions_spilled == 1 and a.evictions_dropped == 0
+    assert a.stranded_reclaims == 0 and len(idx) == 3
+    full, partial = idx.match(toks + [99])
+    assert len(full) == 3 and partial is None
+    assert is_spilled(full[0]) and full[1:] == blocks[1:]
+    assert idx.stats()["spilled_entries"] == 1
+    # the spilled payload is the evicted block's rows, bit-exact
+    got = idx.spill.pop(full[0])
+    assert float(np.asarray(got["k"])[0]) == float(blocks[0])
+
+
+def test_spill_pool_budget_drop_cascades_through_index():
+    """When the host pool's own byte budget forces a spilled parent out,
+    the drop must cascade exactly like a device-tier drop: spilled
+    descendants leave the pool, cached device descendants return to the
+    free list, and a spill racing its ancestor's drop discards cleanly
+    (the mid-``put`` reentrancy path)."""
+    from repro.serving import SpillPool
+
+    a = BlockAllocator(17)
+    idx = PrefixIndex(a, 4)
+    pool = SpillPool(16, mode="cache", staging_depth=0)  # room for TWO entries
+    idx.attach_spill(pool, _spill_fetch)
+    toks = list(range(80, 92))
+    blocks = a.alloc(3)
+    idx.register(toks, blocks, 12)
+    idx.release(blocks)
+    a.alloc(13)
+    a.alloc(3)  # evict the whole chain, oldest first
+    # b0 and b1 spilled; b2's put overflowed the pool, dropping b0 — whose
+    # cascade discarded b1 from the pool and unmapped b2 mid-spill, so the
+    # b2 spill was discarded rather than stranded in the pool
+    assert a.evictions_spilled == 2 and a.evictions_dropped == 1
+    assert len(idx) == 0 and len(pool) == 0 and pool.bytes_used == 0
+    assert idx.stranded_dropped == 2
+    assert idx.match(toks + [99]) == ([], None)
