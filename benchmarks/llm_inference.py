@@ -699,6 +699,96 @@ def run_router() -> list[dict]:
     return rows
 
 
+# ---- fused one-dispatch step A/B ------------------------------------------
+# per-host-round-trip overhead for the modeled step latency: kernel-launch +
+# host sync cost on an HBM-class accelerator (the quantity the fused step
+# removes; a 64-dim CPU smoke model cannot surface it in wall-clock, same
+# reasoning as the openloop arm's virtual clock)
+DISPATCH_OVERHEAD_S = 0.002
+
+
+def run_fused() -> list[dict]:
+    """Legacy multi-dispatch engine vs the fused one-dispatch step.
+
+    Same shared-system-prompt workload (chunked prefill + prefix cache, so
+    mixed chunk/decode ticks occur), both arms warmed on an identical round
+    so every (rows, width) graph shape is compiled before timing.  Asserts:
+    greedy output token-identical, strictly fewer dispatches and host syncs
+    per decoded token, and lower mean per-step latency under the dispatch
+    cost model (overhead x dispatches + token compute)."""
+    cfg = reduce_for_smoke(get_config("mistral-nemo-12b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = _shared_prefix_prompts()
+    arms = {}
+    outs = {}
+    for label, fused in (("legacy", False), ("fused", True)):
+        eng = InferenceEngine(
+            cfg, params, max_batch=4, max_seq=MAX_SEQ, cache_kind="paged",
+            block_size=BLOCK_SIZE, prefix_cache=True, prefill_budget=32,
+            fused=fused,
+        )
+        for p in prompts:  # warm-up round: compiles every graph shape
+            eng.submit(p, max_new_tokens=8)
+        eng.run_until_drained()
+        d0, y0, s0 = eng.dispatches_total, eng.host_syncs_total, eng.steps
+        w0 = eng.prefill_tokens + eng.verify_tokens
+        reqs = [eng.submit(p, max_new_tokens=8) for p in prompts]
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        wall = time.perf_counter() - t0
+        steps = eng.steps - s0
+        toks = sum(len(r.generated) for r in reqs)
+        fed = eng.prefill_tokens + eng.verify_tokens - w0
+        disp = eng.dispatches_total - d0
+        syncs = eng.host_syncs_total - y0
+        outs[label] = [list(r.generated) for r in reqs]
+        arms[label] = {
+            "wall_step_s": wall / max(steps, 1),
+            "model_step_s": (
+                DISPATCH_OVERHEAD_S * disp + TOKEN_COST_S * (toks + fed)
+            ) / max(steps, 1),
+            "dispatches_per_token": disp / max(toks, 1),
+            "host_syncs_per_token": syncs / max(toks, 1),
+            "dispatches_per_step": disp / max(steps, 1),
+            "decode_steps": steps,
+            "tokens_out": toks,
+        }
+    assert outs["fused"] == outs["legacy"], "fused step changed greedy tokens"
+    fs, ls = arms["fused"], arms["legacy"]
+    assert fs["dispatches_per_token"] < ls["dispatches_per_token"], (
+        f"fused must dispatch less per decoded token: "
+        f"{fs['dispatches_per_token']:.3f} vs {ls['dispatches_per_token']:.3f}"
+    )
+    assert fs["host_syncs_per_token"] <= ls["host_syncs_per_token"]
+    assert fs["model_step_s"] < ls["model_step_s"], (
+        f"fused must lower modeled per-step latency: "
+        f"{fs['model_step_s']:.4f} vs {ls['model_step_s']:.4f}"
+    )
+    rows = []
+    for label in ("legacy", "fused"):
+        a = arms[label]
+        rows.append(
+            {
+                "name": f"llm_inference_{label}_step_cpu",
+                "us_per_call": a["wall_step_s"] * 1e6,
+                "model_step_s": a["model_step_s"],
+                "dispatches_per_token": a["dispatches_per_token"],
+                "host_syncs_per_token": a["host_syncs_per_token"],
+                "dispatches_per_step": a["dispatches_per_step"],
+                "decode_steps": a["decode_steps"],
+                "tokens_out": a["tokens_out"],
+                "derived": (
+                    f"model_step_ms={a['model_step_s'] * 1e3:.2f} "
+                    f"disp/tok={a['dispatches_per_token']:.3f} "
+                    f"syncs/tok={a['host_syncs_per_token']:.3f}"
+                ),
+            }
+        )
+    RESULTS_DIR.mkdir(exist_ok=True)
+    (RESULTS_DIR / "llm_inference_fused.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
 def run_tp(tp: int) -> list[dict]:
     """TP=tp vs TP=1 A/B: token-identical greedy output, sharded cache bytes."""
     from repro.launch.mesh import make_serving_mesh
@@ -786,8 +876,16 @@ def main() -> None:
         help="run the tiered-KV A/B (drop-on-evict vs host-RAM spill on an "
         "over-committed pool) on virtual time",
     )
+    ap.add_argument(
+        "--fused", action="store_true",
+        help="run the fused one-dispatch step A/B (legacy multi-dispatch vs "
+        "unified row-batch engine): token equivalence, dispatches per token, "
+        "modeled per-step latency",
+    )
     args = ap.parse_args()
-    if args.spill:
+    if args.fused:
+        rows = run_fused()
+    elif args.spill:
         rows = run_spill()
     elif args.router:
         rows = run_router()

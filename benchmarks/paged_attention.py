@@ -85,6 +85,23 @@ def run() -> list[dict]:
 
 
 def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description="paged-attention microbenchmark")
+    ap.add_argument(
+        "--autotune", action="store_true",
+        help="sweep kernel layout knobs over the benchmark CASES and write "
+        "winners to the user autotune cache (see repro.kernels.autotune)",
+    )
+    ap.add_argument("--iters", type=int, default=5, help="timing reps per candidate")
+    ap.add_argument("--dtype", default="bfloat16", help="pool dtype for the sweep")
+    ap.add_argument("--out", default=None, help="autotune cache path override")
+    args = ap.parse_args()
+    if args.autotune:
+        from repro.kernels.autotune import autotune
+
+        autotune(CASES, dtype=args.dtype, iters=args.iters, out_path=args.out)
+        return
     for r in run():
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
 

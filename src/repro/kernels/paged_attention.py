@@ -158,23 +158,25 @@ def paged_attention_bhd(
 def _paged_prefill_kernel(
     tbl_ref,  # scalar-prefetch (B, nb) int32
     start_ref,  # scalar-prefetch (B,) int32 — absolute position of chunk row 0
-    q_ref,  # (1, 1, C*qpk, hd)
+    q_ref,  # (1, 1, rt, hd) — row tile of the (C*qpk) query rows
     k_ref,  # (1, bs, 1, hd) — physical block picked by the index_map
     v_ref,
-    o_ref,  # (1, 1, C*qpk, hd), revisited across the block dimension
-    acc_ref,  # VMEM (C*qpk, hd) fp32
-    m_ref,  # VMEM (C*qpk, 1) fp32
-    l_ref,  # VMEM (C*qpk, 1) fp32
+    o_ref,  # (1, 1, rt, hd), revisited across the block dimension
+    acc_ref,  # VMEM (rt, hd) fp32
+    m_ref,  # VMEM (rt, 1) fp32
+    l_ref,  # VMEM (rt, 1) fp32
     *,
     scale: float,
     softcap: float,
     window: int,
     block_size: int,
     qpk: int,
+    row_tile: int,
 ):
     b = pl.program_id(0)
-    i = pl.program_id(2)
-    nb = pl.num_programs(2)
+    t = pl.program_id(2)  # query-row tile (autotuned; nt == 1 when untiled)
+    i = pl.program_id(3)
+    nb = pl.num_programs(3)
 
     @pl.when(i == 0)
     def _init():
@@ -182,17 +184,18 @@ def _paged_prefill_kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)  # (C*qpk, hd)
+    q = q_ref[0, 0].astype(jnp.float32)  # (rt, hd)
     k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, hd)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (C*qpk, bs)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (rt, bs)
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
 
     start = start_ref[b]
-    # row r of the query tile is chunk offset r // qpk -> absolute q position
-    q_pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // qpk
+    # global row r = t*rt + local row; row r is chunk offset r // qpk
+    row0 = t * row_tile
+    q_pos = start + (row0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)) // qpk
     kv_pos = i * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     ok = kv_pos <= q_pos  # causal: the chunk's own K/V is already written
     if window > 0:
@@ -223,17 +226,30 @@ def paged_prefill_attention_bhd(
     softcap: float = 0.0,
     window: int = 0,
     interpret: bool = True,
+    rows_per_tile: int = 0,
 ) -> jax.Array:
     """Chunked-prefill attention: every chunk token attends causally over the
     paged logical view [0, start + its offset].  Table entries past the last
     written block must point at a valid (e.g. null) block — they are DMA'd
-    and fully masked by the causal compare.  Returns (B, C, H, hd)."""
+    and fully masked by the causal compare.  Returns (B, C, H, hd).
+
+    ``rows_per_tile`` (autotuned, ``kernels.autotune``): tile the C*qpk
+    query-row dimension so each grid step streams a ``(rows_per_tile, hd)``
+    query block against one K/V page — smaller VMEM scratch at the cost of
+    re-reading pages once per tile.  Rows are independent queries, so any
+    divisor of the row count is numerically identical; 0 (or a non-divisor)
+    means one tile holding every row.
+    """
     B, C, H, hd = q.shape
     N, bs, KV, _ = k_pool.shape
     nb = block_tables.shape[1]
     assert H % KV == 0, (H, KV)
     qpk = H // KV
     rows = C * qpk
+    if rows_per_tile <= 0 or rows % rows_per_tile != 0:
+        rows_per_tile = rows
+    nt = rows // rows_per_tile
+    rt = rows_per_tile
     scale = 1.0 / math.sqrt(hd)
 
     # (B, C, H, hd) -> (B, KV, C*qpk, hd), row r = (chunk offset r//qpk, group r%qpk)
@@ -245,20 +261,23 @@ def paged_prefill_attention_bhd(
         window=window,
         block_size=bs,
         qpk=qpk,
+        row_tile=rt,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, KV, nb),
+        # nb innermost: for a fixed (b, kv, t) the online-softmax scratch walks
+        # every page before the next row tile re-initializes it
+        grid=(B, KV, nt, nb),
         in_specs=[
-            pl.BlockSpec((1, 1, rows, hd), lambda b, kv, i, tbl, st: (b, kv, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd), lambda b, kv, i, tbl, st: (tbl[b, i], 0, kv, 0)),
-            pl.BlockSpec((1, bs, 1, hd), lambda b, kv, i, tbl, st: (tbl[b, i], 0, kv, 0)),
+            pl.BlockSpec((1, 1, rt, hd), lambda b, kv, t, i, tbl, st: (b, kv, t, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, kv, t, i, tbl, st: (tbl[b, i], 0, kv, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, kv, t, i, tbl, st: (tbl[b, i], 0, kv, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, rows, hd), lambda b, kv, i, tbl, st: (b, kv, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, rt, hd), lambda b, kv, t, i, tbl, st: (b, kv, t, 0)),
         scratch_shapes=[
-            pltpu.VMEM((rows, hd), jnp.float32),
-            pltpu.VMEM((rows, 1), jnp.float32),
-            pltpu.VMEM((rows, 1), jnp.float32),
+            pltpu.VMEM((rt, hd), jnp.float32),
+            pltpu.VMEM((rt, 1), jnp.float32),
+            pltpu.VMEM((rt, 1), jnp.float32),
         ],
     )
     out = pl.pallas_call(

@@ -1,18 +1,23 @@
 """Jit'd public wrappers for the paged-attention kernels (decode + chunked
 prefill).
 
-Routes fp pools through the Pallas kernels (interpret mode off-TPU); int8
-pools with per-(token, head) scales fall back to the dequantizing jnp
-reference — the int8 savings are an HBM-traffic property, and on this CPU
-image both paths are emulated anyway.
+Routes fp pools through the Pallas kernels (interpret mode off-TPU);
+quantized (int8/fp8) pools with per-(token, head) scales fall back to the
+dequantizing jnp reference — the quantization savings are an HBM-traffic
+property, and on this CPU image both paths are emulated anyway.
 
 Dtype contract: the pool dtype selects the path, and the two must never
-mix — fp entry points raise on int8 pools (scales are required:
+mix — fp entry points raise on quantized pools (scales are required:
 ``*_quantized``), and the quantized wrappers expect the exact
-``serving.kvquant`` layout (int8 ``k``/``v`` + fp32 per-(token, head)
+``serving.kvquant`` layout (int8/e4m3 ``k``/``v`` + fp32 per-(token, head)
 ``k_scale``/``v_scale``).  The chunked-prefill wrappers serve both the
 prefill chunks and the speculative-decoding verify pass
 (``models.verify_step``) — same kernel, different caller.
+
+Layout choices (decode kernel vs C=1 prefill kernel, prefill query-row
+tiling) come from the ``kernels.autotune`` cache, consulted at trace time —
+shapes are static under ``jax.jit``, so each compiled graph bakes in one
+tuned layout.
 """
 
 from __future__ import annotations
@@ -24,12 +29,19 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels import autotune
 from repro.kernels.paged_attention import paged_attention_bhd, paged_prefill_attention_bhd
 from repro.kernels.paged_attention_ref import paged_attention_ref, paged_prefill_attention_ref
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _quantized_pool(dtype) -> bool:
+    from repro.serving.kvquant import is_quantized_kv
+
+    return is_quantized_kv(dtype)
 
 
 def model_axis_size(mesh) -> int:
@@ -81,14 +93,32 @@ def paged_attention(
     window: int = 0,
     mesh=None,
 ) -> jax.Array:
-    if k_pool.dtype == jnp.int8:
-        raise ValueError("int8 pools need scales: use paged_attention_quantized")
-    kernel = partial(
-        paged_attention_bhd,
-        softcap=softcap,
-        window=window,
-        interpret=not _on_tpu(),
+    if _quantized_pool(k_pool.dtype):
+        raise ValueError("quantized pools need scales: use paged_attention_quantized")
+    tuned = autotune.get_config(
+        k_pool.shape[3], k_pool.shape[1], block_tables.shape[1], k_pool.dtype
     )
+    if tuned["decode_kernel"] == "prefill1":
+        # C=1 prefill layout: start = seq_lens - 1 makes the causal/window
+        # masks degenerate to the decode masks exactly
+        base = partial(
+            paged_prefill_attention_bhd,
+            softcap=softcap,
+            window=window,
+            interpret=not _on_tpu(),
+            rows_per_tile=tuned["prefill_rows_per_tile"],
+        )
+
+        def kernel(qq, kk, vv, tbl, lens):
+            return base(qq[:, None], kk, vv, tbl, lens - 1)[:, 0]
+
+    else:
+        kernel = partial(
+            paged_attention_bhd,
+            softcap=softcap,
+            window=window,
+            interpret=not _on_tpu(),
+        )
     if model_axis_size(mesh) > 1:
         kernel = _tp_dispatch(
             mesh,
@@ -113,13 +143,17 @@ def paged_prefill_attention(
     window: int = 0,
     mesh=None,
 ) -> jax.Array:
-    if k_pool.dtype == jnp.int8:
-        raise ValueError("int8 pools need scales: use paged_prefill_attention_quantized")
+    if _quantized_pool(k_pool.dtype):
+        raise ValueError("quantized pools need scales: use paged_prefill_attention_quantized")
+    tuned = autotune.get_config(
+        k_pool.shape[3], k_pool.shape[1], block_tables.shape[1], k_pool.dtype
+    )
     kernel = partial(
         paged_prefill_attention_bhd,
         softcap=softcap,
         window=window,
         interpret=not _on_tpu(),
+        rows_per_tile=tuned["prefill_rows_per_tile"],
     )
     if model_axis_size(mesh) > 1:
         kernel = _tp_dispatch(

@@ -15,8 +15,10 @@ engine utilization stats.  ``--shared-prefix N`` prepends a common N-token
 system prompt to every request so the prefix cache's hit rate / saved
 prefill tokens show up in the stats; ``--prefill-budget`` bounds prompt
 tokens processed per engine step (chunked prefill interleaved with decode).
-``--cache dense`` selects the slot-granular baseline; ``--quantize-kv``
-stores paged pools int8 (KIVI scales); ``--spill-bytes N`` adds the tiered
+``--cache dense`` selects the slot-granular baseline; ``--quantize-kv
+[int8|fp8]`` stores paged pools quantized (KIVI scales / e4m3);
+``--fused`` lowers each scheduler tick to one jitted dispatch (plan →
+unified batch → in-graph sample/accept); ``--spill-bytes N`` adds the tiered
 KV cache — evicted prefix blocks spill to an N-byte host-RAM pool
 (``--spill-dtype cache|int8|fp8`` picks the at-rest encoding) and swap back
 on a prefix hit at ``--restore-budget`` blocks per step; ``--attn-impl
@@ -85,8 +87,17 @@ def main() -> None:
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=None)
     ap.add_argument("--cache-dtype", default="bf16", choices=sorted(DTYPES))
-    ap.add_argument("--quantize-kv", action="store_true", help="int8 paged block pools")
+    ap.add_argument(
+        "--quantize-kv", nargs="?", const="int8", default=False,
+        choices=("int8", "fp8"),
+        help="quantized paged block pools (bare flag = int8)",
+    )
     ap.add_argument("--attn-impl", default="xla", choices=("xla", "pallas"))
+    ap.add_argument(
+        "--fused", action="store_true",
+        help="fused one-dispatch step: one jitted dispatch + one host sync "
+        "per scheduler tick (chunked paged families only)",
+    )
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument(
@@ -208,6 +219,7 @@ def main() -> None:
             cache_dtype=DTYPES[args.cache_dtype],
             quantize_kv=args.quantize_kv,
             attn_impl=args.attn_impl,
+            fused=args.fused,
             prefix_cache=False if args.no_prefix_cache else None,
             prefill_budget=args.prefill_budget,
             spill_bytes=args.spill_bytes,

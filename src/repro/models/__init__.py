@@ -10,6 +10,7 @@ from repro.models.model import (
     prefill,
     prefill_step,
     supports_chunked_prefill,
+    unified_step,
     verify_step,
 )
 from repro.models.cache import (
@@ -33,6 +34,7 @@ __all__ = [
     "prefill",
     "prefill_step",
     "supports_chunked_prefill",
+    "unified_step",
     "verify_step",
     "abstract_cache",
     "cache_bytes",

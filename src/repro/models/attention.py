@@ -300,6 +300,7 @@ def paged_chunk_attention(
     impl: str = "xla",
     sh=None,
     mesh=None,
+    widths: jax.Array | None = None,
 ):
     """Chunked-prefill attention against a paged (block-pooled) KV cache.
 
@@ -310,6 +311,12 @@ def paged_chunk_attention(
     tbl_row: (B, nb) int32 — the *request's* block table, covering every
              logical block of prompt + generation
     start:   (B,) int32 absolute position of the chunk's first token.
+    widths:  (B,) int32, optional — per-row count of VALID lanes.  Rows in a
+             fused mixed batch feed fewer than C real tokens; lanes at or
+             past ``widths[b]`` are redirected to the null block so their
+             K/V scatter lands in scratch, never in a live block (same
+             masked-scatter pattern as ``serving.kvcache.truncate_block_rows``).
+             Their attention outputs are garbage the caller must discard.
 
     The chunk's K/V is scattered into its blocks first (position t lands in
     block ``tbl_row[b, t // bs]`` at offset ``t % bs``), then every chunk
@@ -317,16 +324,19 @@ def paged_chunk_attention(
     shared prefix blocks grafted by admission, earlier chunks, and this
     chunk itself.  ``impl="pallas"`` uses the multi-query-token
     ``kernels.paged_prefill_attention`` kernel, ``impl="xla"`` the jnp
-    oracle; int8 pools quantize on the way in and take the dequantizing
-    reference.  ``mesh``: tensor-parallel serving mesh — the Pallas kernel
-    runs per-shard under ``shard_map`` on its local head slice (XLA
-    reference fallback when the head counts don't divide the model axis).
-    Returns (out, new_cache) with the same keys as ``cache``.
+    oracle; quantized (int8/fp8) pools quantize on the way in and take the
+    dequantizing reference.  ``mesh``: tensor-parallel serving mesh — the
+    Pallas kernel runs per-shard under ``shard_map`` on its local head slice
+    (XLA reference fallback when the head counts don't divide the model
+    axis).  Returns (out, new_cache) with the same keys as ``cache``.
     """
+    from repro.serving.kvquant import kv_quant_mode_of
+
     k_pool, v_pool = cache["k"], cache["v"]
     B, C, _ = x.shape
     bs = k_pool.shape[1]
-    quantized = k_pool.dtype == jnp.int8
+    quant_mode = kv_quant_mode_of(k_pool.dtype)
+    quantized = quant_mode is not None
 
     positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B, C)
     q, k, v = _qkv(cfg, p, x)
@@ -334,14 +344,21 @@ def paged_chunk_attention(
         q = apply_rope(q, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
         k = apply_rope(k, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
 
-    phys = jnp.take_along_axis(tbl_row, positions // bs, axis=1)  # (B, C)
+    # dead lanes may index past the table; clamp — their write goes to scratch
+    idx = jnp.minimum(positions // bs, tbl_row.shape[1] - 1)
+    phys = jnp.take_along_axis(tbl_row, idx, axis=1)  # (B, C)
+    if widths is not None:
+        from repro.models.cache import NULL_BLOCK
+
+        lane = jnp.arange(C, dtype=jnp.int32)[None, :]
+        phys = jnp.where(lane < widths[:, None], phys, NULL_BLOCK)
     off = positions % bs
     new_cache = dict(cache)
     if quantized:
         from repro.serving.kvquant import quantize
 
-        kq, ks = quantize(k)
-        vq, vs = quantize(v)
+        kq, ks = quantize(k, quant_mode)
+        vq, vs = quantize(v, quant_mode)
         new_cache["k"] = k_pool.at[phys, off].set(kq)
         new_cache["v"] = v_pool.at[phys, off].set(vq)
         new_cache["k_scale"] = cache["k_scale"].at[phys, off].set(ks)
@@ -420,10 +437,13 @@ def paged_decode_attention(
 
     Returns (out, new_cache) with the same keys as ``cache``.
     """
+    from repro.serving.kvquant import kv_quant_mode_of
+
     k_pool, v_pool, tbl = cache["k"], cache["v"], cache["tbl"]
     B = x.shape[0]
     bs = k_pool.shape[1]
-    quantized = k_pool.dtype == jnp.int8
+    quant_mode = kv_quant_mode_of(k_pool.dtype)
+    quantized = quant_mode is not None
 
     q, k, v = _qkv(cfg, p, x)
     if cfg.rotary_pct > 0 and not cfg.learned_pos_embedding:
@@ -437,8 +457,8 @@ def paged_decode_attention(
     if quantized:
         from repro.serving.kvquant import quantize
 
-        kq, ks = quantize(k[:, 0])
-        vq, vs = quantize(v[:, 0])
+        kq, ks = quantize(k[:, 0], quant_mode)
+        vq, vs = quantize(v[:, 0], quant_mode)
         new_cache["k"] = k_pool.at[phys, off].set(kq)
         new_cache["v"] = v_pool.at[phys, off].set(vq)
         new_cache["k_scale"] = cache["k_scale"].at[phys, off].set(ks)

@@ -97,12 +97,14 @@ def dense_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
     return x, {"k": k, "v": v}
 
 
-def dense_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla", mesh=None):
+def dense_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla", mesh=None, widths=None):
     """Chunked-prefill step: like ``dense_block_decode`` but for a C-token
-    chunk written/attended through the request's own paged block table."""
+    chunk written/attended through the request's own paged block table.
+    ``widths`` (fused mixed batches): per-row valid-lane counts — pad lanes
+    scatter to the null block and their outputs are discarded upstream."""
     h = apply_norm(cfg, p["norm1"], x)
     a, new_attn = paged_chunk_attention(
-        cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl, mesh=mesh
+        cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl, mesh=mesh, widths=widths
     )
     if cfg.parallel_residual:
         f = ffn(cfg, p["mlp"], h, sh=sh)
@@ -174,12 +176,14 @@ def moe_block_prefill(cfg, p, x, *, positions=None, q_chunk=0, sh=None):
     return x, {"k": k, "v": v}
 
 
-def moe_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla", mesh=None):
+def moe_block_chunk(cfg, p, x, cache, tbl_row, start, *, sh=None, attn_impl="xla", mesh=None, widths=None):
     """Chunked-prefill step for MoE blocks.  Routing sees exactly the chunk's
-    tokens (no length-bucket pad tokens competing for expert capacity)."""
+    tokens (no length-bucket pad tokens competing for expert capacity).
+    Fused mixed batches (``widths``) reintroduce pad lanes into the routed
+    batch — same expert-capacity caveat as bucketed prefill."""
     h = apply_norm(cfg, p["norm1"], x)
     a, new_attn = paged_chunk_attention(
-        cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl, mesh=mesh
+        cfg, p["attn"], h, cache, tbl_row, start, sh=sh, impl=attn_impl, mesh=mesh, widths=widths
     )
     x = x + a
     h2 = apply_norm(cfg, p["norm2"], x)

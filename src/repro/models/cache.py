@@ -233,20 +233,23 @@ def paged_layer_cache_layout(
     max_blocks_per_seq: int,
     dtype,
     *,
-    quantized: bool = False,
+    quantized: bool | str = False,
 ) -> dict:
     """(shape, dtype) tree for ONE layer's paged cache.
 
     ``k``/``v`` are the global block pools — physical blocks are shared
     across batch slots and handed out by ``serving.paged.BlockAllocator``.
     ``tbl`` maps each slot's logical block index to a physical block id.
-    ``quantized`` stores the pools int8 with per-(token, head) fp32 scales
-    (the ``serving.kvquant`` KIVI layout).
+    ``quantized`` stores the pools quantized with per-(token, head) fp32
+    scales (the ``serving.kvquant`` layout): ``True``/``"int8"`` for int8,
+    ``"fp8"`` for e4m3 blocks.
     """
     if not supports_paged(cfg):
         raise ValueError(f"no paged cache for family {cfg.family!r} ({cfg.name})")
+    from repro.serving.kvquant import kv_storage_dtype
+
     KV, hd = cfg.num_kv_heads, cfg.head_dim
-    kv_dtype = jnp.int8 if quantized else dtype
+    kv_dtype = kv_storage_dtype(quantized) if quantized else dtype
     ent = {
         "k": ((num_blocks, block_size, KV, hd), kv_dtype),
         "v": ((num_blocks, block_size, KV, hd), kv_dtype),
@@ -272,7 +275,7 @@ def init_paged_cache(
     max_blocks_per_seq: int,
     dtype,
     *,
-    quantized: bool = False,
+    quantized: bool | str = False,
 ):
     """Zero-initialized stacked (L, ...) paged cache; tables point at the
     null block."""
@@ -293,7 +296,7 @@ def paged_cache_bytes(
     max_blocks_per_seq: int,
     dtype,
     *,
-    quantized: bool = False,
+    quantized: bool | str = False,
 ) -> int:
     lay = _stack(
         paged_layer_cache_layout(
@@ -317,7 +320,7 @@ def stacked_cache_axes(cfg) -> dict:
     )
 
 
-def paged_cache_axes(cfg, *, quantized: bool = False) -> dict:
+def paged_cache_axes(cfg, *, quantized: bool | str = False) -> dict:
     """Logical axes for the stacked PAGED cache (tensor-parallel serving).
 
     The pools shard along ``kv_heads`` (the "model" mesh axis): every device

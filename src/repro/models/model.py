@@ -286,10 +286,16 @@ def supports_chunked_prefill(cfg) -> bool:
     return cfg.family in CHUNKED_PREFILL_FAMILIES
 
 
-def _chunk_stack(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla", mesh=None):
+def _chunk_stack(
+    cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_impl="xla", mesh=None, widths=None
+):
     """Shared chunk runner: embed C tokens at ``start + [0, C)``, scatter
     their K/V into the paged cache through ``tbl_row`` and attend causally
-    over the paged history.  Returns (x (B, C, D), new cache)."""
+    over the paged history.  Returns (x (B, C, D), new cache).
+
+    ``widths`` ((B,) int32, optional): per-row valid-lane counts for fused
+    mixed batches — lanes at or past ``widths[b]`` scatter to the null block
+    and their outputs are garbage the caller discards."""
     if not supports_chunked_prefill(cfg):
         raise ValueError(f"no chunked prefill for family {cfg.family!r} ({cfg.name})")
     C = tokens.shape[1]
@@ -299,7 +305,10 @@ def _chunk_stack(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_im
 
     def body(x, xs):
         p_layer, c_layer = xs
-        x, nc = step(cfg, p_layer, x, c_layer, tbl_row, start, sh=sh, attn_impl=attn_impl, mesh=mesh)
+        x, nc = step(
+            cfg, p_layer, x, c_layer, tbl_row, start,
+            sh=sh, attn_impl=attn_impl, mesh=mesh, widths=widths,
+        )
         return x, nc
 
     return jax.lax.scan(body, x, (params["blocks"], cache))
@@ -354,6 +363,37 @@ def verify_step(cfg, params, cache, tokens, start, tbl_row, *, sh=None, attn_imp
     """
     x, new_cache = _chunk_stack(
         cfg, params, cache, tokens, start, tbl_row, sh=sh, attn_impl=attn_impl, mesh=mesh
+    )
+    logits = lm_logits(cfg, params, x, sh=sh)
+    return logits, new_cache
+
+
+def unified_step(
+    cfg, params, cache, tokens, start, widths, tbl_rows, *, sh=None, attn_impl="xla", mesh=None
+):
+    """One fused dispatch over a mixed row batch (the one-dispatch step).
+
+    tokens:   (R, W) int32 — each row feeds up to W consecutive tokens
+    start:    (R,) int32 absolute position of each row's first token
+    widths:   (R,) int32 valid lanes per row — a decode row feeds 1, a
+              prefill-chunk row feeds its chunk length, a spec-verify row
+              feeds spec_k + 1; lanes past the width scatter to the null
+              block and their logits are garbage the caller discards
+    tbl_rows: (R, nb) int32 per-row block tables (a mid-prefill row's table
+              is its private block list; decode/verify rows pass the
+              published engine row)
+
+    Rows are independent batch entries through the same chunk machinery as
+    ``prefill_step`` / ``verify_step``; because every layer scatters all
+    rows' K/V before attending, several chunk rows of ONE request may ride
+    in the same dispatch (a later chunk reads the earlier chunk's same-layer
+    K/V exactly as sequential chunking would).  Returns (logits (R, W, V),
+    new cache) — all-lane logits so the caller can fold sampling and
+    speculative accept into the same compiled graph.
+    """
+    x, new_cache = _chunk_stack(
+        cfg, params, cache, tokens, start, tbl_rows,
+        sh=sh, attn_impl=attn_impl, mesh=mesh, widths=widths,
     )
     logits = lm_logits(cfg, params, x, sh=sh)
     return logits, new_cache

@@ -51,8 +51,9 @@ Hybrid (attention+SSM) archs page their K/V but their recurrent states
 absorb the whole prompt in one pass, so they keep the blocking
 prefill+graft admission (no prefix sharing / chunking); dense/moe take the
 incremental path.  Window archs reclaim blocks that slide out of the window
-mid-decode (shared blocks just drop a reference).  ``quantize_kv=True``
-stores paged pools int8 with per-(token, head) scales (``serving.kvquant``).
+mid-decode (shared blocks just drop a reference).  ``quantize_kv="int8"``
+(or ``True``) stores paged pools int8, ``"fp8"`` stores e4m3 — both with
+per-(token, head) scales (``serving.kvquant``).
 
 **Speculative decoding** (``spec_decode="ngram"|"draft"``, dense/moe paged
 only): each step drafts up to ``spec_k`` candidate tokens per slot
@@ -71,6 +72,17 @@ Per-step sampling is one jitted whole-batch dispatch
 (``sampler.sample_tokens``) with per-slot temperature/top-k carried as data.
 The allocator's free list is auto-defragmented when ``fragmentation()``
 exceeds ``defrag_threshold`` after frees (``defrag_triggers`` in stats).
+
+**Fused one-dispatch step** (``fused=True``, chunked families only): the
+scheduler emits a typed ``StepPlan`` instead of walking phases, and each
+tick lowers to ONE jitted dispatch over a unified (rows, width) batch —
+decode rows, prefill chunks and spec-verify windows together through
+``models.unified_step``, with sampling (``sampler.fused_sample_accept``)
+and the speculative rollback (``kvcache.truncate_block_rows``) folded into
+the same graph.  The host sees one sync of (new_tokens, accept_counts,
+cut, done_flags) per step; ``stats()`` reports ``dispatches_per_step`` /
+``host_syncs_per_step``.  Greedy outputs are token-identical to the legacy
+walk (``tests/test_fused_step.py``).
 
 Scheduling (``serving.scheduler.SchedulerCore``): queue ordering, admission,
 chunked-prefill budgeting, spec-decode windows and SLO-aware **preemption**
@@ -133,6 +145,7 @@ from repro.models import (
     prefill_step,
     supports_chunked_prefill,
     supports_paged,
+    unified_step,
     verify_step,
 )
 from repro.serving.kvcache import (
@@ -152,7 +165,12 @@ from repro.serving.metrics import EnergyBridge, MetricsRegistry
 from repro.serving.paged import BlockAllocator, blocks_needed, truncate_blocks
 from repro.serving.prefix import PrefixIndex, is_spilled
 from repro.serving.spill import SPILL_MODES, SpillPool, warn_if_fp8_over_int8
-from repro.serving.sampler import sample_token, sample_tokens, spec_accept
+from repro.serving.sampler import (
+    fused_sample_accept,
+    sample_token,
+    sample_tokens,
+    spec_accept,
+)
 from repro.serving.scheduler import (  # re-exported for back-compat
     Request,
     RequestState,
@@ -201,8 +219,9 @@ class InferenceEngine:
         block_size: int = 32,
         num_blocks: Optional[int] = None,
         cache_dtype=jnp.bfloat16,
-        quantize_kv: bool = False,
+        quantize_kv: bool | str = False,
         attn_impl: str = "xla",
+        fused: bool = False,
         prefix_cache: Optional[bool] = None,
         prefill_budget: int = 0,
         policy: str = "slo",
@@ -238,6 +257,9 @@ class InferenceEngine:
         self.eos = eos_token
         self.cache_kind = cache_kind
         self.cache_dtype = cache_dtype
+        from repro.serving.kvquant import normalize_kv_quant
+
+        quantize_kv = normalize_kv_quant(quantize_kv)  # "int8" | "fp8" | None
         if quantize_kv and cache_kind != "paged":
             warnings.warn(
                 f"quantize_kv only applies to paged block pools; ignored for "
@@ -245,11 +267,11 @@ class InferenceEngine:
                 RuntimeWarning,
                 stacklevel=2,
             )
-        self.quantize_kv = quantize_kv and cache_kind == "paged"
+        self.quantize_kv = quantize_kv if cache_kind == "paged" else None
         if self.quantize_kv and attn_impl == "pallas":
             warnings.warn(
-                "int8 block pools have no Pallas kernel yet; decode runs the "
-                "dequantizing jnp reference path despite attn_impl='pallas'",
+                f"{self.quantize_kv} block pools have no Pallas kernel yet; decode "
+                "runs the dequantizing jnp reference path despite attn_impl='pallas'",
                 RuntimeWarning,
                 stacklevel=2,
             )
@@ -359,6 +381,16 @@ class InferenceEngine:
                 RuntimeWarning,
                 stacklevel=2,
             )
+        # fused one-dispatch step: the scheduler emits a StepPlan of typed
+        # rows and the engine lowers the whole tick (decode + prefill chunks
+        # + spec verify + sampling/accept + rollback) into one jitted call.
+        # It rides the chunked machinery, so it has the same family gate.
+        if fused and not self._chunked:
+            raise ValueError(
+                f"fused=True needs a paged cache and a chunk-resumable family "
+                f"(dense/moe); got {cfg.name} ({cache_kind}/{cfg.family})"
+            )
+        self.fused = bool(fused)
         # scheduling brain: queue ordering (SLO/FCFS), admission, preemption
         # decisions and the chunked-prefill budget live in the extracted
         # SchedulerCore; the engine provides the execution primitives
@@ -564,6 +596,69 @@ class InferenceEngine:
                 donate_argnums=(0,),
                 **c_out,
             )
+        if self.fused:
+            # one-dispatch step graphs.  The host sees only the per-row
+            # (new_tokens, accept_counts, cut, done_flags) once per tick;
+            # sampling, speculative accept and the rejected-tail rollback all
+            # live inside the compiled graph.  Shapes (R, W) vary per tick
+            # but are drawn from bounded bucketed sets, so jax.jit's shape
+            # cache holds one compiled program per (row-bucket, width).
+            eos = self.eos
+
+            def _fused_decode_fn(p, c, tokens, pos, temps, top_ks, room, key):
+                # pure-decode ticks keep decode_step's exact graph (bit-
+                # identical logits to the unfused engine), sampling folded in
+                logits, c = decode_step(cfg, p, c, tokens, pos, attn_impl=attn_impl, mesh=mesh)
+                toks = sample_tokens(logits, temps, top_ks, key)
+                done = (toks == eos) | (room <= 1)
+                return toks, done, c
+
+            def _make_fused_mixed(spec: bool):
+                def fn(p, c, tokens, start, widths, tbl, drafts, valid, temps,
+                       top_ks, sample_lane, room, roll_end, key, qprobs):
+                    logits, c = unified_step(
+                        cfg, p, c, tokens, start, widths, tbl, attn_impl=attn_impl, mesh=mesh
+                    )
+                    n_acc, final = fused_sample_accept(
+                        logits, drafts, qprobs, valid, temps, top_ks, sample_lane, key
+                    )
+                    # committed emission length: first EOS inside the window,
+                    # clamped by the remaining generation budget (``room``)
+                    W = tokens.shape[1]
+                    lanes = jnp.arange(W, dtype=jnp.int32)
+                    emitted = jnp.where(
+                        lanes[None, :] == n_acc[:, None],
+                        final[:, None],
+                        jnp.pad(drafts, ((0, 0), (0, 1))),
+                    )
+                    is_eos = (lanes[None, :] <= n_acc[:, None]) & (emitted == eos)
+                    eos_cut = jnp.where(
+                        is_eos.any(axis=1),
+                        jnp.argmax(is_eos, axis=1).astype(jnp.int32) + 1,
+                        jnp.int32(W + 1),
+                    )
+                    cut = jnp.minimum(jnp.minimum(eos_cut, room), n_acc + 1).astype(jnp.int32)
+                    done = (eos_cut <= cut) | (cut >= room)
+                    if spec:
+                        # in-graph rollback: zero verify rows' rejected tail
+                        # lanes [start+cut, roll_end) — roll_end <= start+cut
+                        # makes a row a no-op (decode/chunk rows)
+                        c = truncate_block_rows(c, tbl, start + cut, roll_end, span=W)
+                    return final, n_acc, cut, done, c
+
+                return fn
+
+            if mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                repl = NamedSharding(mesh, PartitionSpec())
+                fd_out = dict(out_shardings=(repl, repl, self._cache_shardings))
+                fm_out = dict(out_shardings=(repl, repl, repl, repl, self._cache_shardings))
+            else:
+                fd_out = fm_out = {}
+            self._fused_decode = jax.jit(_fused_decode_fn, donate_argnums=(1,), **fd_out)
+            self._fused_plain = jax.jit(_make_fused_mixed(False), donate_argnums=(1,), **fm_out)
+            self._fused_spec = jax.jit(_make_fused_mixed(True), donate_argnums=(1,), **fm_out)
         self._bucketed = cfg.family in BUCKETED_FAMILIES
         self.steps = 0
         self.tokens_out = 0
@@ -591,6 +686,18 @@ class InferenceEngine:
         self.spec_drafted = 0  # candidate tokens proposed (valid lanes only)
         self.spec_accepted = 0  # drafted tokens committed
         self.spec_emitted = 0  # tokens emitted via the speculative path
+        # dispatch/sync accounting (the fused step's raison d'être): every
+        # jitted call through the _dispatch seam and every device->host sync
+        # (_host_fetch / profiled block_until_ready) increments these, so
+        # stats() can report dispatches/syncs per step for A/B comparison
+        self.dispatches_total = 0
+        self.host_syncs_total = 0
+        self._g_dispatches = M.gauge(
+            "engine_dispatches_per_step", "jitted dispatches per engine step"
+        )
+        self._g_host_syncs = M.gauge(
+            "engine_host_syncs_per_step", "device->host syncs per engine step"
+        )
 
     # ------------------------------------------------------------------
     @property
@@ -883,18 +990,31 @@ class InferenceEngine:
         ``profile=True`` brackets the dispatch with the injectable clock and
         a device sync so step latency decomposes by phase
         (``engine_profile_<phase>_seconds`` histograms, and a per-step
-        breakdown in the tracer's ``step`` span args)."""
+        breakdown in the tracer's ``step`` span args).
+
+        Every call counts one jitted dispatch (the fused-step A/B metric);
+        the profiled branch's ``block_until_ready`` additionally counts as a
+        host sync."""
+        self.dispatches_total += 1
         if not self._profile:
             return fn(*args)
         t0 = self._clock()
         out = fn(*args)
         _block_until_ready(out)
+        self.host_syncs_total += 1
         dt = self._clock() - t0
         self.metrics.histogram(
             f"engine_profile_{phase}_seconds", f"synced {phase} dispatch time"
         ).observe(dt)
         self._phase_acc[phase] = self._phase_acc.get(phase, 0.0) + dt
         return out
+
+    def _host_fetch(self, *arrays):
+        """Bring device results to the host as ONE counted sync event (the
+        arrays are fetched together at the jit-call seam; per-step stats
+        report the count as ``host_syncs_per_step``)."""
+        self.host_syncs_total += 1
+        return tuple(np.asarray(a) for a in arrays)
 
     def _note_admit(self, req: Request, slot: int) -> None:
         req.admit_t = self._clock()
@@ -1178,7 +1298,15 @@ class InferenceEngine:
 
     def _emit_first_token(self, req: Request, logits) -> None:
         self._key, sub = jax.random.split(self._key)
+        self.dispatches_total += 1
+        self.host_syncs_total += 1
         tok = int(sample_token(logits, req.temperature, sub, top_k=req.top_k))
+        self._note_first_token(req, tok)
+
+    def _note_first_token(self, req: Request, tok: int) -> None:
+        """First-token bookkeeping shared by the legacy path (which samples
+        host-side from the final chunk's logits) and the fused path (whose
+        token comes out of the one-dispatch graph)."""
         req.generated.append(tok)
         req.first_token_t = self._clock()
         self.tokens_out += 1
@@ -1325,7 +1453,8 @@ class InferenceEngine:
         )
         # np.asarray forces the host sync, so the sample phase needs no
         # extra block_until_ready
-        n_acc, final = np.asarray(n_acc), np.asarray(final)
+        self.dispatches_total += 1  # the jitted spec_accept call above
+        n_acc, final = self._host_fetch(n_acc, final)
         if self._profile:
             dt = self._clock() - t_sample
             self.metrics.histogram(
@@ -1503,6 +1632,255 @@ class InferenceEngine:
             self.cache["tbl"] = jnp.asarray(tbl)
         self._tbl_dirty = False
 
+    # ---- fused one-dispatch step -------------------------------------
+    def _fused_step(self) -> int:
+        """One fused engine tick: the scheduler emits a ``StepPlan`` of
+        typed rows (decode / prefill-chunk / spec-verify) and the whole
+        tick's model work — including sampling, speculative accept and the
+        rejected-tail rollback — runs as ONE jitted dispatch, after which
+        the host reads (new_tokens, accept_counts, cut, done_flags) in one
+        sync.  Pure-decode ticks route through ``decode_step``'s exact graph
+        (bit-identical logits to the unfused engine); mixed ticks run every
+        row through the unified chunk path (greedy token-identical).
+
+        One scheduling difference vs the legacy walk: a request whose
+        prompt completes this tick gets its first token from the fused
+        graph but joins decode only NEXT tick (the legacy path runs prefill
+        before collecting the decode batch, so it decodes in the same
+        step).  Token sequences are unchanged; per-request step counts can
+        shift by one."""
+        spec = self.spec_mode != "off"
+        plan = self.scheduler.plan(spec=spec)
+        self.peak_active = max(self.peak_active, sum(r is not None for r in self.slots))
+        if not plan.rows:
+            return 0
+        if not plan.chunk_rows and not spec:
+            return self._fused_decode_tick([pr.req for pr in plan.rows])
+        return self._fused_mixed_tick(plan)
+
+    def _fused_decode_tick(self, active: list[Request]) -> int:
+        """All rows are single-token decodes: one dispatch through the
+        fused decode graph (``decode_step`` + in-graph ``sample_tokens``)."""
+        self._sync_tables()
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        temps = np.zeros((B,), np.float32)
+        top_ks = np.zeros((B,), np.int32)
+        room = np.ones((B,), np.int32)
+        for r in active:
+            tokens[r.slot, 0] = r.generated[-1]
+            temps[r.slot] = r.temperature
+            top_ks[r.slot] = r.top_k
+            room[r.slot] = r.max_new_tokens - len(r.generated)
+            r.step_work += 1
+        self._key, sub = jax.random.split(self._key)
+        toks, done, self.cache = self._dispatch(
+            "fused_decode",
+            self._fused_decode,
+            self.params,
+            self.cache,
+            jnp.asarray(tokens),
+            jnp.asarray(self.pos, jnp.int32),
+            jnp.asarray(temps),
+            jnp.asarray(top_ks),
+            jnp.asarray(room),
+            sub,
+        )
+        toks_h, _done_h = self._host_fetch(toks, done)
+        self.steps += 1
+        produced = 0
+        for r in active:
+            tok = int(toks_h[r.slot])
+            r.generated.append(tok)
+            self.pos[r.slot] += 1
+            produced += 1
+            self.tokens_out += 1
+            self._c_tokens.inc()
+            if self.on_token is not None:
+                self.on_token(r, [tok])
+            self._reclaim_window_blocks(r)
+            self._finish_if_done(r)
+        return produced
+
+    def _fused_mixed_tick(self, plan) -> int:
+        """Lower a mixed ``StepPlan`` into one unified (R, W) row batch and
+        dispatch it once.  R buckets to a power of two (pad rows carry
+        width 0 and an all-null table, so their lanes scatter into the null
+        scratch block); W is the widest row — chunk widths are the
+        power-of-two binary decomposition and the verify window is
+        ``spec_k + 1``, so the (R, W) compile cache stays small."""
+        K = self.spec_k
+        rows = plan.rows
+        R0 = len(rows)
+        R = 1 << max(R0 - 1, 0).bit_length()
+        has_verify = any(pr.kind == "verify" for pr in rows)
+        row_width = {
+            id(pr): (1 if pr.kind == "decode" else K + 1 if pr.kind == "verify" else pr.take)
+            for pr in rows
+        }
+        W = max(max(row_width.values()), 1)
+        nb = self.max_blocks_per_seq
+        V = self.cfg.padded_vocab
+        tokens = np.zeros((R, W), np.int32)
+        start = np.zeros((R,), np.int32)
+        widths = np.zeros((R,), np.int32)
+        tbl = np.zeros((R, nb), np.int32)  # null-block rows for pad lanes
+        drafts = np.zeros((R, W - 1), np.int32)
+        valid = np.zeros((R, W - 1), bool)
+        qprobs = (
+            np.zeros((R, W - 1, V), np.float32)
+            if (self._draft is not None and has_verify)
+            else None
+        )
+        temps = np.zeros((R,), np.float32)
+        top_ks = np.zeros((R,), np.int32)
+        sample_lane = np.zeros((R,), np.int32)
+        room = np.full((R,), W + 1, np.int32)  # pad rows: cut never clamps
+        roll_end = np.zeros((R,), np.int32)  # 0 = no rollback for this row
+        for i, pr in enumerate(rows):
+            r = pr.req
+            temps[i] = r.temperature
+            top_ks[i] = r.top_k
+            widths[i] = row_width[id(pr)]
+            if pr.kind == "decode":
+                s = r.slot
+                tokens[i, 0] = r.generated[-1]
+                start[i] = self.pos[s]
+                tbl[i] = self.tbl[s]
+                room[i] = r.max_new_tokens - len(r.generated)
+                r.step_work += 1
+            elif pr.kind == "verify":
+                s = r.slot
+                ctx = r.prompt + r.generated
+                kmax = self.scheduler.spec_window(r, K)
+                if self.spec_mode == "ngram":
+                    d = ngram_draft(ctx, kmax)
+                else:
+                    d, q = self._draft.draft(
+                        s, ctx, kmax, temperature=r.temperature, top_k=r.top_k
+                    )
+                    if d:
+                        qprobs[i, : len(d)] = q
+                tokens[i, 0] = r.generated[-1]
+                if d:
+                    tokens[i, 1 : 1 + len(d)] = d
+                    drafts[i, : len(d)] = d
+                    valid[i, : len(d)] = True
+                start[i] = self.pos[s]
+                tbl[i] = self.tbl[s]
+                room[i] = r.max_new_tokens - len(r.generated)
+                roll_end[i] = int(start[i]) + K + 1
+                self.spec_slot_steps += 1
+                self.spec_drafted += len(d)
+                self._c_drafted.inc(len(d))
+                r.step_work += K + 1
+                self.verify_tokens += K + 1
+            else:  # prefill chunk
+                c = pr.take
+                if c:
+                    ctx = r.prompt + r.generated
+                    tokens[i, :c] = ctx[pr.start : pr.start + c]
+                start[i] = pr.start
+                tbl[i, : len(r.blocks)] = r.blocks
+                sample_lane[i] = max(c - 1, 0)
+                if pr.final:
+                    room[i] = max(r.max_new_tokens - len(r.generated), 1)
+        self._key, sub = jax.random.split(self._key)
+        fn = self._fused_spec if has_verify else self._fused_plain
+        final, n_acc, cut, done, self.cache = self._dispatch(
+            "fused_step",
+            fn,
+            self.params,
+            self.cache,
+            jnp.asarray(tokens),
+            jnp.asarray(start),
+            jnp.asarray(widths),
+            jnp.asarray(tbl),
+            jnp.asarray(drafts),
+            jnp.asarray(valid),
+            jnp.asarray(temps),
+            jnp.asarray(top_ks),
+            jnp.asarray(sample_lane),
+            jnp.asarray(room),
+            jnp.asarray(roll_end),
+            sub,
+            jnp.asarray(qprobs) if qprobs is not None else None,
+        )
+        final_h, n_acc_h, cut_h, _done_h = self._host_fetch(final, n_acc, cut, done)
+        if any(pr.kind != "chunk" for pr in rows):
+            self.steps += 1
+        if has_verify:
+            self.spec_steps += 1
+        produced = 0
+        for i, pr in enumerate(rows):
+            r = pr.req
+            if pr.kind == "chunk":
+                c = pr.take
+                r.prefill_pos = pr.start + c
+                r.step_work += c
+                self.pos[r.slot] = r.prefill_pos
+                if c:
+                    self.prefill_chunks += 1
+                    self.prefill_tokens += c
+                    self._c_prefill_tokens.inc(c)
+                    self.tracer.instant(
+                        "prefill_chunk", track=slot_track(r.slot), req_id=r.req_id,
+                        pos=pr.start, tokens=c,
+                    )
+                    if self.prefix is not None:
+                        ctx = r.prompt + r.generated
+                        r.reg_block, r.reg_parent = self.prefix.register(
+                            ctx, r.blocks, r.prefill_pos,
+                            start_block=r.reg_block, parent=r.reg_parent,
+                        )
+                if pr.final:
+                    self.scheduler.drop_prefilling(r)
+                    self.tbl[r.slot] = make_table_row(r.blocks, self.max_blocks_per_seq)
+                    self._tbl_dirty = True
+                    self.pos[r.slot] = r.prefill_target
+                    r.prefilling = False
+                    if not r.generated:
+                        self._note_first_token(r, int(final_h[i]))
+            elif pr.kind == "decode":
+                tok = int(final_h[i])
+                r.generated.append(tok)
+                self.pos[r.slot] += 1
+                produced += 1
+                self.tokens_out += 1
+                self._c_tokens.inc()
+                if self.on_token is not None:
+                    self.on_token(r, [tok])
+                self._reclaim_window_blocks(r)
+                self._finish_if_done(r)
+            else:  # verify
+                s = r.slot
+                na = int(n_acc_h[i])
+                cut_i = int(cut_h[i])
+                emitted = [int(drafts[i, j]) for j in range(na)] + [int(final_h[i])]
+                emitted = emitted[:cut_i]
+                base = int(start[i])
+                clen = len(r.prompt) + len(r.generated)
+                r.generated.extend(emitted)
+                self.pos[s] = base + cut_i
+                produced += cut_i
+                self.tokens_out += cut_i
+                self._c_tokens.inc(cut_i)
+                self.spec_accepted += min(na, cut_i)
+                self._c_accepted.inc(min(na, cut_i))
+                self.spec_emitted += cut_i
+                self.tracer.instant(
+                    "spec_accept", track=slot_track(s), req_id=r.req_id,
+                    drafted=int(valid[i].sum()), accepted=na, emitted=cut_i,
+                )
+                if self.on_token is not None and emitted:
+                    self.on_token(r, emitted)
+                if self._draft is not None:
+                    self._draft.rollback(s, clen + min(na, cut_i))
+                self._finish_if_done(r)
+                if r.state == RequestState.ACTIVE:
+                    self._reclaim_window_blocks(r)
+        return produced
+
     def step(self) -> int:
         """One engine iteration: one scheduling pass (admission with SLO
         preemption, then the chunked-prefill budget — see
@@ -1512,6 +1890,11 @@ class InferenceEngine:
         if self._profile:
             self._phase_acc = {}
         self._enforce_deadlines()
+        if self.fused:
+            produced = self._fused_step()
+            self._maybe_defrag()
+            self._note_step(t0, done0, produced)
+            return produced
         self.scheduler.schedule()
         self.peak_active = max(self.peak_active, sum(r is not None for r in self.slots))
         active = [r for r in self.slots if r is not None and not r.prefilling]
@@ -1537,11 +1920,12 @@ class InferenceEngine:
             # common serving default) skips the sort/categorical work.
             # np.asarray is the host sync, so profiling adds no extra one
             t_sample = self._clock() if self._profile else 0.0
+            self.dispatches_total += 1  # the sampling dispatch below
             if all(r.temperature <= 0.0 for r in active):
-                sampled = np.asarray(jnp.argmax(logits, axis=-1))
+                (sampled,) = self._host_fetch(jnp.argmax(logits, axis=-1))
             else:
                 self._key, sub = jax.random.split(self._key)
-                sampled = np.asarray(
+                (sampled,) = self._host_fetch(
                     sample_tokens(logits, jnp.asarray(temps), jnp.asarray(top_ks), sub)
                 )
             if self._profile:
@@ -1579,6 +1963,9 @@ class InferenceEngine:
         self._g_queue.set(len(self.queue))
         self._g_active.set(sum(r is not None and not r.prefilling for r in self.slots))
         self._g_prefilling.set(len(self._prefilling))
+        if self.steps:
+            self._g_dispatches.set(self.dispatches_total / self.steps)
+            self._g_host_syncs.set(self.host_syncs_total / self.steps)
         if self.allocator is not None:
             self._g_frag.set(self.allocator.fragmentation())
         if self.energy is None:
@@ -1687,6 +2074,15 @@ class InferenceEngine:
             "cache_bytes": self.cache_bytes(),
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
+            "fused": self.fused,
+            "dispatches_total": self.dispatches_total,
+            "host_syncs_total": self.host_syncs_total,
+            "dispatches_per_step": (
+                self.dispatches_total / self.steps if self.steps else 0.0
+            ),
+            "host_syncs_per_step": (
+                self.host_syncs_total / self.steps if self.steps else 0.0
+            ),
         }
         if self.energy is not None:
             s["energy_joules"] = self.energy.joules

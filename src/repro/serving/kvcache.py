@@ -193,9 +193,11 @@ def graft_prefill_into_blocks(cfg, pool_cache, raw_cache, blocks, seq_filled: in
     Hybrid conv/SSM states are grafted into batch slot ``slot`` of their
     slot-dense entries.  Returns the updated pool cache.
     """
+    from repro.serving.kvquant import kv_quant_mode_of
+
     bs = pool_cache["k"].shape[2]
     span = len(blocks) * bs
-    quantized = pool_cache["k"].dtype == jnp.int8
+    quant_mode = kv_quant_mode_of(pool_cache["k"].dtype)
     new = dict(pool_cache)
     for name in ("k", "v"):
         kv = raw_cache[name][:, 0]  # (L, S, KV, hd)
@@ -207,10 +209,10 @@ def graft_prefill_into_blocks(cfg, pool_cache, raw_cache, blocks, seq_filled: in
         # zero pad positions >= seq_filled so reused blocks never leak stale K/V
         valid = jnp.arange(span) < seq_filled
         kv = jnp.where(valid[None, :, None, None], kv, 0)
-        if quantized:
+        if quant_mode is not None:
             from repro.serving.kvquant import quantize
 
-            q, scale = quantize(kv)
+            q, scale = quantize(kv, quant_mode)
             new[name] = _scatter_prompt(pool_cache[name], q, blocks)
             new[f"{name}_scale"] = _scatter_prompt(pool_cache[f"{name}_scale"], scale, blocks)
         else:

@@ -14,11 +14,19 @@ This module is the opt-in serving feature: ``quantize_cache`` converts a
 decode cache in place; ``attend_quantized`` is the reference consumption
 path validated against fp attention in tests/test_kvquant.py.
 
-Paged pools (``InferenceEngine(quantize_kv=True)``) use ``quantize`` at
+Paged pools (``InferenceEngine(quantize_kv=...)``) use ``quantize`` at
 every write site — prefill graft, chunk scatter, decode, speculative
-verify — storing int8 ``k``/``v`` blocks with fp32 per-(token, head)
+verify — storing quantized ``k``/``v`` blocks with fp32 per-(token, head)
 scales in sibling ``k_scale``/``v_scale`` pool leaves; the block-table ops
 in ``serving.kvcache`` move scale rows together with their data rows.
+
+Two block dtypes share the layout and the dequantizing read path
+(``pool.astype(f32) * scale`` in ``kernels.paged_attention_ref``):
+
+* ``"int8"`` — symmetric round-to-nearest, scale = amax / 127 (KIVI).
+* ``"fp8"`` — e4m3 saturating cast (the PR-1 ``repro.fp8`` recipe applied
+  per-(token, head)), scale = amax / 448.  Same byte footprint as int8 but
+  a nonuniform grid: more resolution near zero, coarser at the amax edge.
 """
 
 from __future__ import annotations
@@ -28,17 +36,61 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+E4M3 = jnp.float8_e4m3fn
+E4M3_MAX = 448.0
+
+KV_QUANT_MODES = ("int8", "fp8")
+_STORAGE_DTYPES = {"int8": jnp.int8, "fp8": E4M3}
+
+
+def normalize_kv_quant(mode) -> str | None:
+    """Engine knob -> canonical mode string (``True`` keeps meaning int8)."""
+    if not mode:
+        return None
+    if mode is True:
+        return "int8"
+    if mode not in KV_QUANT_MODES:
+        raise ValueError(f"quantize_kv must be one of {KV_QUANT_MODES}, got {mode!r}")
+    return mode
+
+
+def kv_storage_dtype(mode: str):
+    return _STORAGE_DTYPES[normalize_kv_quant(mode)]
+
+
+def kv_quant_mode_of(dtype) -> str | None:
+    """Mode implied by a pool's storage dtype (None for unquantized pools)."""
+    for mode, dt in _STORAGE_DTYPES.items():
+        if dtype == dt:
+            return mode
+    return None
+
+
+def is_quantized_kv(dtype) -> bool:
+    """True when a pool dtype carries sibling scale leaves (int8 or fp8)."""
+    return kv_quant_mode_of(dtype) is not None
+
 
 class QuantizedKV(NamedTuple):
-    k_q: jax.Array  # int8, same shape as k
+    k_q: jax.Array  # int8/e4m3, same shape as k
     k_scale: jax.Array  # fp32 (..., seq, heads, 1)
     v_q: jax.Array
     v_scale: jax.Array
 
 
-def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Per-(token, head) symmetric int8. x: (..., seq, heads, head_dim)."""
+def quantize(x: jax.Array, mode: str = "int8") -> tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric quantize. x: (..., seq, heads, head_dim).
+
+    Both modes return ``(q, scale)`` with dequant = ``q.astype(f32) * scale``,
+    so every consumer (ref kernels, spill tier, COW copies) is mode-agnostic.
+    """
     xf = x.astype(jnp.float32)
+    if mode == "fp8":
+        scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / E4M3_MAX
+        scale = jnp.maximum(scale, 1e-8)
+        # saturating cast: astype(e4m3) maps out-of-range to NaN, so clip first
+        q = jnp.clip(xf / scale, -E4M3_MAX, E4M3_MAX).astype(E4M3)
+        return q, scale
     scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
     scale = jnp.maximum(scale, 1e-8)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)

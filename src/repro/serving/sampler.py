@@ -12,6 +12,9 @@ Three entry points, all consumed by ``serving.engine``:
   is exactly the target distribution — greedy rows degenerate to "accept
   while the draft matches the argmax", which is what makes greedy speculative
   decode token-identical to the non-speculative engine.
+* ``fused_sample_accept`` — ``spec_accept`` generalised to the fused mixed
+  row batch (decode / prefill-chunk / spec-verify rows): graph-composable,
+  so the one-dispatch step samples inside the same compiled graph.
 """
 
 from __future__ import annotations
@@ -144,5 +147,69 @@ def spec_accept(
         jax.random.split(k_f, B), jnp.log(jnp.maximum(resid, 1e-38))
     )
     fin_greedy = jnp.take_along_axis(argmax, n_acc[:, None], axis=1)[:, 0]
+    final = jnp.where(greedy, fin_greedy, fin_sampled).astype(jnp.int32)
+    return n_acc.astype(jnp.int32), final
+
+
+def fused_sample_accept(
+    logits: jax.Array,  # (R, W, V) all-lane logits from models.unified_step
+    drafts: jax.Array,  # (R, W-1) int32 drafted tokens (zeros on non-spec rows)
+    draft_probs,  # (R, W-1, V) fp32 draft distributions, or None -> one-hot(drafts)
+    valid: jax.Array,  # (R, W-1) bool; all-False rows have no speculative window
+    temperature: jax.Array,  # (R,) fp32; <= 0 means greedy
+    top_k: jax.Array,  # (R,) int32; <= 0 means full softmax
+    sample_lane: jax.Array,  # (R,) int32 lane whose logits the row samples from
+    key: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """``spec_accept`` generalised to the fused mixed row batch: sampling is
+    graph-composable, so the engine folds it into the one-dispatch step.
+
+    Row types share one recurrence: a spec-verify row passes
+    ``sample_lane=0`` and its drafts/valid window — the accept recurrence
+    yields ``n_acc`` and the correction/bonus comes from lane ``n_acc``,
+    exactly ``spec_accept``.  A decode row passes ``sample_lane=0`` with an
+    all-invalid window (``n_acc`` collapses to 0 — sample lane 0); a
+    prefill-chunk row passes ``sample_lane = width - 1`` (its first token
+    comes from the last REAL lane's logits).  The sampled lane is therefore
+    ``n_acc + sample_lane``; an invalid lane's ``q`` is zero, so non-spec
+    rows take a plain tempered/top-k sample from ``p`` — greedy rows the
+    exact argmax, token-identical to the unfused engine.
+
+    ``draft_probs=None`` builds the one-hot proposal in-graph (the ngram
+    drafter / non-spec ticks) instead of materialising a dense (R, W-1, V)
+    host array.  Returns ``(n_acc (R,), final (R,))``.
+    """
+    R, W, V = logits.shape
+    K = W - 1
+    if draft_probs is None:
+        draft_probs = jax.nn.one_hot(drafts, V, dtype=jnp.float32)
+    greedy = temperature <= 0.0
+    p = _target_probs(logits, temperature, top_k)  # (R, W, V)
+    argmax = jnp.argmax(logits, axis=-1)  # (R, W)
+
+    k_u, k_f = jax.random.split(key)
+    u = jax.random.uniform(k_u, (R, K))
+    p_draft = jnp.take_along_axis(p[:, :K], drafts[..., None], axis=-1)[..., 0]
+    q_draft = jnp.take_along_axis(draft_probs, drafts[..., None], axis=-1)[..., 0]
+    accept_sampled = u < jnp.minimum(p_draft / jnp.maximum(q_draft, 1e-20), 1.0)
+    accept_greedy = drafts == argmax[:, :K]
+    accept = valid & jnp.where(greedy[:, None], accept_greedy, accept_sampled)
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+    lane = jnp.minimum(n_acc + sample_lane, W - 1)  # clamp: width-0 pad rows
+    j = lane[:, None, None]
+    p_fin = jnp.take_along_axis(p, j, axis=1)[:, 0]  # (R, V)
+    q_pad = jnp.pad(draft_probs, ((0, 0), (0, 1), (0, 0)))  # q_K = 0 -> bonus from p
+    q_fin = jnp.take_along_axis(q_pad, j, axis=1)[:, 0]
+    valid_pad = jnp.pad(valid, ((0, 0), (0, 1)))
+    valid_j = jnp.take_along_axis(valid_pad, lane[:, None], axis=1)[:, 0]
+    q_fin = jnp.where(valid_j[:, None], q_fin, 0.0)  # non-spec lane: sample from p
+    resid = jnp.clip(p_fin - q_fin, 0.0, None)
+    norm = jnp.sum(resid, axis=-1, keepdims=True)
+    resid = jnp.where(norm > 0, resid / jnp.maximum(norm, 1e-20), p_fin)
+    fin_sampled = jax.vmap(jax.random.categorical)(
+        jax.random.split(k_f, R), jnp.log(jnp.maximum(resid, 1e-38))
+    )
+    fin_greedy = jnp.take_along_axis(argmax, lane[:, None], axis=1)[:, 0]
     final = jnp.where(greedy, fin_greedy, fin_sampled).astype(jnp.int32)
     return n_acc.astype(jnp.int32), final

@@ -39,6 +39,11 @@ that brain, extracted from the formerly monolithic ``engine.step()``:
 * **Spec-decode windows** — the per-slot draft window is clamped here
   (never draft past the generation budget), keeping every scheduling
   decision in one place.
+* **Fused planning** — ``plan()`` runs the same admission/restore pass as
+  ``schedule()`` but returns one ``StepPlan`` of typed ``PlanRow``s
+  (``decode`` / ``chunk`` / ``verify``) instead of making imperative model
+  calls: the fused engine (``fused=True``) lowers the whole plan into a
+  single jitted dispatch and applies the side effects afterwards.
 
 The scheduler drives the engine through a narrow operations surface
 (``free_slots`` / ``running`` / ``try_admit`` / ``preempt`` / ``can_preempt``
@@ -156,6 +161,47 @@ class Request:
 
 
 POLICIES = ("slo", "fcfs")
+
+
+@dataclass
+class PlanRow:
+    """One typed row of a fused step: what the engine feeds, not how.
+
+    ``kind``: ``"decode"`` (one token, published table), ``"chunk"`` (a
+    prefill chunk of ``take`` tokens from the request's private table) or
+    ``"verify"`` (a spec_k+1 speculative window).  ``start`` is the row's
+    absolute cache position (-1 = engine-resolved from its position array —
+    decode/verify rows).  ``final`` marks the chunk that completes the
+    prompt: its table publishes and (for fresh requests) its last real
+    lane's logits yield the first token."""
+
+    kind: str  # "decode" | "chunk" | "verify"
+    req: Request
+    start: int = -1
+    take: int = 1
+    final: bool = False
+
+
+@dataclass
+class StepPlan:
+    """One scheduler tick's worth of model work as a unified row batch.
+
+    Produced by ``SchedulerCore.plan()`` (the fused engine path) instead of
+    the imperative ``schedule()`` walk: the scheduler decides WHAT runs —
+    admission, restores, the prefill-budget split into binary chunks, the
+    decode/verify row set — and the engine lowers the whole plan into ONE
+    jitted dispatch.  ``plan()`` mutates no request state; the engine applies
+    positions/bookkeeping after the dispatch returns."""
+
+    rows: list[PlanRow] = field(default_factory=list)
+
+    @property
+    def chunk_rows(self) -> list[PlanRow]:
+        return [r for r in self.rows if r.kind == "chunk"]
+
+    @property
+    def model_rows(self) -> list[PlanRow]:
+        return [r for r in self.rows if r.kind != "chunk"]
 
 
 class SchedulerCore:
@@ -322,3 +368,52 @@ class SchedulerCore:
         self._admit()
         self._restore()
         self._prefill()
+
+    # -- fused planning ------------------------------------------------
+    def _plan_prefill(self) -> list[PlanRow]:
+        """The ``_prefill`` budget walk re-expressed as rows: same FCFS
+        order, same restore skip, same binary-chunk decomposition — but no
+        ``run_chunk`` calls and no request mutation.  Several chunks of one
+        request become several rows (the fused dispatch scatters each
+        layer's K/V before attending, so a later chunk row reads the earlier
+        chunk row's same-layer writes exactly as sequential chunking would)."""
+        if not self.ops.chunked():
+            return []
+        budget = self.prefill_budget if self.prefill_budget > 0 else math.inf
+        restoring = getattr(self.ops, "restoring", None)
+        rows: list[PlanRow] = []
+        for req in self.prefilling:
+            if budget <= 0:
+                break
+            if restoring is not None and restoring(req):
+                continue  # swap-ins in flight: skip, don't stall the budget
+            take = int(min(budget, req.prefill_target - req.prefill_pos))
+            pos = req.prefill_pos
+            chunks = binary_chunks(take)
+            for c in chunks:
+                pos += c
+                rows.append(
+                    PlanRow("chunk", req, pos - c, c, final=pos >= req.prefill_target)
+                )
+            if not chunks and pos >= req.prefill_target:
+                # fully prefix-matched resumed context: nothing to feed, the
+                # table just publishes (a zero-width row the engine masks out)
+                rows.append(PlanRow("chunk", req, pos, 0, final=True))
+            budget -= take
+        return rows
+
+    def plan(self, *, spec: bool = False) -> StepPlan:
+        """One scheduling pass for the fused engine: admission + restores as
+        ``schedule()``, then ONE ``StepPlan`` of typed rows instead of
+        imperative per-chunk model calls.  Decoding slots become ``decode``
+        rows (or ``verify`` rows when ``spec``); the prefill budget becomes
+        ``chunk`` rows.  The engine owns applying the plan's side effects."""
+        self._admit()
+        self._restore()
+        rows = [
+            PlanRow("verify" if spec else "decode", r)
+            for r in self.ops.running()
+            if not r.prefilling
+        ]
+        rows += self._plan_prefill()
+        return StepPlan(rows)

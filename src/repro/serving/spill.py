@@ -296,13 +296,14 @@ class SpillPool:
         }
 
 
-def warn_if_fp8_over_int8(quantize_kv: bool, mode: str) -> str:
-    """fp8-at-rest over an int8 pool would quantize quantized ints; fall
-    back to the exact pool-native bytes instead."""
+def warn_if_fp8_over_int8(quantize_kv, mode: str) -> str:
+    """fp8-at-rest over a quantized (int8/fp8) pool would quantize already-
+    quantized rows; fall back to the exact pool-native bytes instead.
+    ``quantize_kv``: the engine's normalized pool mode (None/"int8"/"fp8")."""
     if quantize_kv and mode == "fp8":
         warnings.warn(
-            "spill_dtype='fp8' over an int8 (quantize_kv) pool would re-quantize "
-            "int8 rows; spilling pool-native int8+scales instead",
+            f"spill_dtype='fp8' over a quantized (quantize_kv={quantize_kv!r}) pool "
+            "would re-quantize quantized rows; spilling pool-native bytes+scales instead",
             RuntimeWarning,
             stacklevel=3,
         )
